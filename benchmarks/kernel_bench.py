@@ -1,0 +1,67 @@
+"""Pallas bit-serial kernel benchmark: tile-plan sweep + backend comparison.
+
+On this CPU container the Pallas kernel runs in interpret mode (semantics,
+not speed), so the *wall-clock* comparison across backends uses the XLA
+expressions of the same algorithm (popcount / mxu-plane / int-direct) and
+the tile sweep reports the planner's VMEM working sets for the TPU target —
+the quantity BlockSpec tiling actually optimizes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitserial import int_matmul
+from repro.core.mapping import plan_matmul
+
+
+def _bench(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def backend_comparison():
+    """Wall-clock of the three Eq.-1 execution strategies across <W:I>.
+
+    The DESIGN §2 trade-off experiment: the paper-faithful popcount
+    dataflow scales with W*I plane pairs, the MXU bit-plane path pays one
+    {0,1} contraction per pair, the direct integer matmul is constant in
+    precision — 'which wins at which precision' quantified (CPU reference
+    numbers; the structural trend carries to TPU where the MXU advantage
+    grows)."""
+    rows = []
+    m, k, n = 256, 2048, 256
+    key = jax.random.PRNGKey(0)
+    for bits in (2, 4, 8):
+        qa = jax.random.randint(key, (m, k), 0, 2**bits)
+        qw = jax.random.randint(jax.random.fold_in(key, 1), (k, n), 0, 2**bits)
+        for backend in ("popcount", "mxu-plane", "int-direct"):
+            f = jax.jit(lambda a, w, b=backend, bb=bits: int_matmul(a, w, bb, bb, b))
+            dt = _bench(f, qa, qw)
+            rows.append({"W:I": f"<{bits}:{bits}>", "backend": backend,
+                         "m_k_n": f"{m}x{k}x{n}", "ms": round(dt * 1e3, 2),
+                         "GOPS_int": round(2 * m * k * n / dt / 1e9, 1)})
+    return rows
+
+
+def tile_plan_sweep():
+    """BlockSpec tile plans across GEMM shapes: VMEM working set vs grid."""
+    rows = []
+    for (m, k, n) in [(128, 1024, 128), (1024, 4096, 1024),
+                      (4096, 4096, 4096), (256, 32768, 256),
+                      (8192, 1024, 8192)]:
+        for (ab, wb) in [(4, 4), (8, 8)]:
+            p = plan_matmul(m, k, n, ab, wb)
+            rows.append({
+                "MxKxN": f"{m}x{k}x{n}", "W:I": f"<{wb}:{ab}>",
+                "bm": p.bm, "bn": p.bn, "bk_bits": p.bk_bits,
+                "grid": "x".join(map(str, p.grid)),
+                "vmem_KB": round(p.vmem_bytes / 1024, 1),
+            })
+    return rows

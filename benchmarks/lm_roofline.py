@@ -1,0 +1,103 @@
+"""Roofline table over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and renders
+per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs usefulness ratio, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(_ROOT, "results", "dryrun")
+BASELINE = os.path.join(_ROOT, "results", "dryrun_baseline")
+
+
+def load_cells(mesh_filter: str | None = None, directory: str | None = None,
+               variants: bool = False):
+    cells = []
+    d = directory or RESULTS
+    if not os.path.isdir(d):
+        return cells
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        if not variants and f.count("__") > 2:   # variant-tagged cells
+            continue
+        with open(os.path.join(d, f)) as fh:
+            r = json.load(fh)
+        if mesh_filter and mesh_filter not in r.get("mesh", ""):
+            continue
+        cells.append(r)
+    return cells
+
+
+def roofline_table(mesh_filter: str = "16x16:data", directory: str | None = None):
+    """Single-pod roofline rows (the §Roofline deliverable)."""
+    rows = []
+    for r in load_cells(directory=directory):
+        mesh = r.get("mesh", "")
+        if not mesh.startswith("16x16"):
+            continue
+        if "skipped" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "bottleneck": "SKIP", "t_compute_ms": "-",
+                         "t_memory_ms": "-", "t_collective_ms": "-",
+                         "useful_flops": "-", "roofline_frac": "-"})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_ms": round(rf["t_compute_s"] * 1e3, 2),
+            "t_memory_ms": round(rf["t_memory_s"] * 1e3, 2),
+            "t_collective_ms": round(rf["t_collective_s"] * 1e3, 2),
+            "bottleneck": rf["bottleneck"],
+            "useful_flops": round(rf["useful_flops_fraction"], 3),
+            "roofline_frac": round(rf["roofline_fraction"], 3),
+        })
+    return rows
+
+
+def multipod_check():
+    """Multi-pod (2x16x16) compile status per cell (§Dry-run)."""
+    rows = []
+    for r in load_cells():
+        if not r.get("mesh", "").startswith("2x16x16"):
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "status": "SKIP" if "skipped" in r else "compiled",
+            "compile_s": r.get("compile_s", "-"),
+            "collective_wire_GB_per_chip": (
+                "-" if "skipped" in r else
+                round(r["collectives"]["wire_bytes_per_chip"] / 1e9, 3)),
+        })
+    return rows
+
+
+def baseline_vs_optimized():
+    """Per-cell roofline-fraction delta: pre-optimization framework
+    (results/dryrun_baseline) vs final (results/dryrun), single-pod."""
+    base = {(r["arch"], r["shape"]): r for r in load_cells(directory=BASELINE)
+            if r.get("mesh", "").startswith("16x16")}
+    rows = []
+    for r in load_cells():
+        if not r.get("mesh", "").startswith("16x16") or "skipped" in r:
+            continue
+        b = base.get((r["arch"], r["shape"]))
+        if b is None or "skipped" in b:
+            continue
+        bf = b["roofline"]
+        of = r["roofline"]
+        bound_b = max(bf["t_compute_s"], bf["t_memory_s"], bf["t_collective_s"])
+        bound_o = max(of["t_compute_s"], of["t_memory_s"], of["t_collective_s"])
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "bound_before_s": round(bound_b, 3),
+            "bound_after_s": round(bound_o, 3),
+            "speedup": round(bound_b / bound_o, 2) if bound_o else "-",
+            "frac_before": round(bf["roofline_fraction"], 4),
+            "frac_after": round(of["roofline_fraction"], 4),
+        })
+    return rows

@@ -1,0 +1,67 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--only X]``.
+
+Sections map 1:1 onto the paper's tables/figures (+ the TPU-side roofline
+artifacts). Each renders as an aligned text table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def render(title: str, rows: list) -> None:
+    print(f"\n== {title} " + "=" * max(1, 70 - len(title)))
+    if not rows:
+        print("  (no rows — run the producing step first)")
+        return
+    cols = list(rows[0].keys())
+    widths = {c: max(len(str(c)), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    print("  " + "  ".join(str(c).ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  " + "  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on section names")
+    args = ap.parse_args(argv)
+
+    from . import kernel_bench, lm_roofline, paper_figures
+
+    sections = [
+        ("fig13a: capacity sweep", paper_figures.fig13a_capacity_sweep),
+        ("fig13b: bandwidth sweep", paper_figures.fig13b_bandwidth_sweep),
+        ("fig14: energy efficiency vs counterparts", paper_figures.fig14_energy_efficiency),
+        ("fig15: per-area speedup vs counterparts", paper_figures.fig15_speedup),
+        ("table3: accelerator comparison", paper_figures.table3_comparison),
+        ("fig16: latency/energy breakdown (resnet50)", paper_figures.fig16_breakdown),
+        ("fig17: add-on area breakdown", paper_figures.fig17_area_overhead),
+        ("paper-claims check (§5.3)", paper_figures.paper_claims_check),
+        ("kernel: Eq.1 backend comparison (CPU)", kernel_bench.backend_comparison),
+        ("kernel: BlockSpec tile plans (TPU target)", kernel_bench.tile_plan_sweep),
+        ("roofline: single-pod 16x16 (from dry-run)", lm_roofline.roofline_table),
+        ("dry-run: multi-pod 2x16x16 compile status", lm_roofline.multipod_check),
+        ("perf: baseline vs optimized step-time bound", lm_roofline.baseline_vs_optimized),
+    ]
+    t0 = time.time()
+    failures = []
+    for title, fn in sections:
+        if args.only and args.only not in title:
+            continue
+        try:
+            render(title, fn())
+        except Exception as e:  # keep the suite running; report at the end
+            failures.append((title, repr(e)))
+            print(f"\n== {title} FAILED: {e!r}")
+    print(f"\nbenchmarks done in {time.time() - t0:.1f}s")
+    if failures:
+        for t, e in failures:
+            print("FAILED:", t, e)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``.
+
+Ten assigned LM-family architectures plus the paper's own CNN benchmark
+models (which run through the PIM architecture simulator rather than the
+JAX LM stack — see :mod:`repro.configs.paper_cnns`).
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ArchConfig, ShapeSpec
+
+_MODULES = {
+    "grok-1-314b": "grok_1_314b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "musicgen-large": "musicgen_large",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "granite-3-2b": "granite_3_2b",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+PAPER_CNNS = ("alexnet", "vgg19", "resnet50")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {', '.join(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = ["ARCH_IDS", "PAPER_CNNS", "SHAPES", "ArchConfig", "ShapeSpec",
+           "all_configs", "get_config"]

@@ -1,0 +1,56 @@
+"""Arch-config plumbing: input shapes, applicability rules, registry types.
+
+Every assigned architecture gets one ``ArchConfig`` binding its published
+``ModelConfig`` to the four assigned input shapes. ``applicable_shapes``
+encodes the assignment's skip rules:
+
+  * ``long_500k`` needs sub-quadratic attention — only recurrent/local
+    archs (recurrentgemma, rwkv6) run it; full-attention archs record an
+    explicit skip (DESIGN.md §Arch-applicability).
+  * decode shapes lower ``serve_step`` (one token against a seq_len KV
+    cache); train shapes lower ``train_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.lm.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    model: ModelConfig
+    source: str                  # provenance tag from the assignment table
+    notes: str = ""
+
+    def applicable_shapes(self) -> dict:
+        """shape name -> ShapeSpec | skip-reason string."""
+        out = {}
+        for name, spec in SHAPES.items():
+            if name == "long_500k" and self.model.attends_globally:
+                out[name] = ("skip: full quadratic attention cannot hold a "
+                             "524288-token KV cache; sub-quadratic archs only")
+            else:
+                out[name] = spec
+        return out
+
+    def runnable_shapes(self) -> list:
+        return [s for s in self.applicable_shapes().values()
+                if isinstance(s, ShapeSpec)]

@@ -1,0 +1,31 @@
+"""The paper's own benchmark models (AlexNet / VGG19 / ResNet50, §5.3).
+
+These run two ways:
+  * through the JAX CNN stack (:mod:`repro.models.cnn`) with PIM-quantized
+    layers — the numerical reproduction;
+  * through the PIM architecture simulator (:mod:`repro.pim`) — the
+    performance/energy reproduction (Figs. 13-17, Table 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.pim_layers import PIMQuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNBenchConfig:
+    name: str
+    image: int = 224
+    classes: int = 1000
+    pim: PIMQuantConfig = PIMQuantConfig(w_bits=8, a_bits=8, backend="int-direct")
+
+
+CONFIGS = {
+    "alexnet": CNNBenchConfig("alexnet"),
+    "vgg19": CNNBenchConfig("vgg19"),
+    "resnet50": CNNBenchConfig("resnet50"),
+}
+
+# The paper's precision sweep (Figs. 14-15).
+WI_SWEEP = [(2, 2), (4, 4), (8, 8), (16, 16)]

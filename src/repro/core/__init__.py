@@ -1,0 +1,32 @@
+"""Core of the reproduction: the paper's bit-serial PIM arithmetic.
+
+Public surface:
+  quantize      — Eq. 2 affine quantization, Eq. 3 BN folding, STE fake-quant
+  bitslice      — bit-plane decomposition + uint32 lane packing
+  bitserial     — Eq. 1 AND+popcount matmul (popcount / mxu-plane / int-direct)
+  pim_layers    — PIMLinear / PIMConv2D drop-in layers + PIMQuantConfig
+  mapping       — the paper's data-mapping scheme as VMEM/subarray tile plans
+"""
+from .bitserial import int_matmul, quantized_matmul
+from .bitslice import bitplanes, pack_bits, plane_weights, popcount, slice_and_pack, unpack_bits
+from .mapping import SubarrayPlan, TilePlan, plan_matmul, plan_subarrays
+from .pim_layers import PIMQuantConfig, pim_conv2d, pim_linear, prepack_weights
+from .quantize import (
+    QuantParams,
+    affine_correction,
+    calibrate_minmax,
+    dequantize,
+    fake_quant,
+    fold_batchnorm,
+    quantize,
+)
+
+__all__ = [
+    "QuantParams", "affine_correction", "calibrate_minmax", "dequantize",
+    "fake_quant", "fold_batchnorm", "quantize",
+    "bitplanes", "pack_bits", "plane_weights", "popcount", "slice_and_pack",
+    "unpack_bits",
+    "int_matmul", "quantized_matmul",
+    "PIMQuantConfig", "pim_conv2d", "pim_linear", "prepack_weights",
+    "SubarrayPlan", "TilePlan", "plan_matmul", "plan_subarrays",
+]

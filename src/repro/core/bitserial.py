@@ -1,0 +1,134 @@
+"""Bit-serial arithmetic built from AND + bitcount + shift (paper Eq. 1).
+
+    I * W = sum_n sum_m 2^(n+m) * bitcount(AND(c_n(I), c_m(W)))
+
+Three interchangeable execution backends, all bit-exact w.r.t. each other:
+
+``popcount``  the paper-faithful dataflow: packed uint32 planes, lane-wise
+              AND, ``population_count``, accumulate with the 2^(n+m) shift
+              weights. This is what the Pallas kernel
+              (:mod:`repro.kernels.bitserial_matmul`) implements with VMEM
+              blocking; the version here is the XLA expression of the same
+              algorithm and doubles as its oracle.
+
+``mxu-plane`` the TPU-codesign alternative: each (n, m) plane pair is a
+              {0,1} matrix contraction, which the MXU executes natively —
+              ``bitcount(AND(a, w))`` over a K axis *is* a dot product of
+              0/1 vectors. Same arithmetic, systolic-array execution.
+
+``int-direct`` reference: one integer matmul of the multi-bit codes. This is
+              what Eq. 1 decomposes; used to validate the other two and as
+              the fast path when the target supports int8 MXU contractions.
+
+Accumulation is int32 and exact while ``sum_k qa*qw < 2^31`` (K up to ~32k at
+<8:8>); overflow wraps identically in every backend (two's complement), so
+cross-backend equivalence holds mod 2^32 unconditionally.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import bitslice
+from .quantize import QuantParams, affine_correction, calibrate_minmax, quantize
+
+Backend = ("popcount", "mxu-plane", "int-direct")
+
+
+# ---------------------------------------------------------------------------
+# Integer core: P = qa @ qw  (qa: (..., K) codes, qw: (K, N) codes)
+# ---------------------------------------------------------------------------
+
+def int_matmul_popcount(qa: jax.Array, qw: jax.Array, a_bits: int, w_bits: int) -> jax.Array:
+    """Eq. 1 with packed planes + popcount. qa (B, K), qw (K, N) -> (B, N) i32."""
+    pa = bitslice.slice_and_pack(qa, a_bits)  # (a_bits, B, Kp)
+    pw = bitslice.slice_and_pack(qw.T, w_bits)  # (w_bits, N, Kp)
+
+    def plane_pair(carry, nm):
+        n, m = nm
+        a = pa[n]  # (B, Kp) uint32
+        w = pw[m]  # (N, Kp) uint32
+        # The sense-amp AND against the stored plane, then per-column bitcount.
+        cnt = bitslice.popcount(a[:, None, :] & w[None, :, :]).sum(-1)  # (B, N)
+        return carry + (cnt << (n + m)), None
+
+    nm = jnp.stack(jnp.meshgrid(jnp.arange(a_bits), jnp.arange(w_bits), indexing="ij"), -1)
+    nm = nm.reshape(-1, 2)
+    init = jnp.zeros((qa.shape[0], qw.shape[1]), jnp.int32)
+    out, _ = jax.lax.scan(lambda c, i: plane_pair(c, (i[0], i[1])), init, nm)
+    return out
+
+
+def int_matmul_mxu_plane(qa: jax.Array, qw: jax.Array, a_bits: int, w_bits: int) -> jax.Array:
+    """Eq. 1 with each plane pair contracted as a {0,1} matmul (MXU path)."""
+    pa = bitslice.bitplanes(qa, a_bits)  # (a_bits, B, K) 0/1
+    pw = bitslice.bitplanes(qw, w_bits)  # (w_bits, K, N) 0/1
+    # Contract all plane pairs in one batched einsum; XLA maps each (n, m)
+    # contraction onto the MXU. f32 accumulate is exact for 0/1 entries up to
+    # K < 2^24; fold the 2^(n+m) shifts afterwards.
+    cnt = jnp.einsum(
+        "nbk,mko->nmbo", pa.astype(jnp.bfloat16), pw.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    w = bitslice.plane_weights(a_bits, w_bits)[:, :, None, None]
+    return (cnt * w).sum((0, 1)).astype(jnp.int32)
+
+
+def int_matmul_direct(qa: jax.Array, qw: jax.Array, a_bits: int = 0, w_bits: int = 0) -> jax.Array:
+    """Direct integer contraction of the codes (what Eq. 1 decomposes)."""
+    return jax.lax.dot_general(
+        qa.astype(jnp.int32), qw.astype(jnp.int32),
+        (((qa.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+_BACKENDS = {
+    "popcount": int_matmul_popcount,
+    "mxu-plane": int_matmul_mxu_plane,
+    "int-direct": int_matmul_direct,
+}
+
+
+def int_matmul(qa, qw, a_bits, w_bits, backend="popcount"):
+    if backend == "pallas":  # resolved lazily to avoid a circular import
+        from repro.kernels import ops as _kops
+
+        return _kops.bitserial_matmul(qa, qw, a_bits=a_bits, w_bits=w_bits)
+    return _BACKENDS[backend](qa, qw, a_bits, w_bits)
+
+
+# ---------------------------------------------------------------------------
+# Float-facing quantized matmul (Eq. 2 calibration + Eq. 1 core + correction)
+# ---------------------------------------------------------------------------
+
+def quantized_matmul(
+    a: jax.Array,  # (..., K) float
+    w: jax.Array,  # (K, N) float
+    a_bits: int = 8,
+    w_bits: int = 8,
+    backend: str = "popcount",
+    wq: QuantParams | None = None,
+    qw: jax.Array | None = None,
+) -> jax.Array:
+    """Full paper pipeline: calibrate -> quantize -> bit-serial P -> dequantize.
+
+    Weights may be pre-quantized (``wq``/``qw``) — the deployment mode where
+    codes live in memory and only activations are quantized on the fly (the
+    paper's weights are programmed into subarrays once).
+    """
+    lead = a.shape[:-1]
+    k = a.shape[-1]
+    a2 = a.reshape(-1, k)
+    aq = calibrate_minmax(a2, a_bits)
+    qa = quantize(a2, aq)
+    if qw is None:
+        wq = calibrate_minmax(w, w_bits)
+        qw = quantize(w, wq)
+    p = int_matmul(qa, qw, a_bits, w_bits, backend)
+    sa = qa.sum(-1, keepdims=True)
+    sw = qw.sum(0)
+    y = affine_correction(p, sa, sw, k, aq, wq)
+    return y.reshape(*lead, w.shape[-1])

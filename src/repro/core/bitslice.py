@@ -1,0 +1,75 @@
+"""Bit-plane decomposition and lane packing (paper §4.1, Fig. 8).
+
+The paper stores an M-bit matrix as M 1-bit matrices, one per subarray. On
+TPU the same decomposition packs each 1-bit plane 32-to-a-lane into ``uint32``
+words so the VPU evaluates 32 of the paper's sense-amp AND operations per
+lane per cycle, and ``population_count`` replaces the per-column bit-counter.
+
+Layout convention: the *contraction* axis K is packed, i.e. a plane of an
+``(..., K)`` integer tensor becomes ``(..., K//32)`` uint32. Planes are
+stacked on a new leading axis -> ``(bits, ..., K//32)``; this mirrors the
+paper's "one subarray per bit-plane" placement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE_BITS = 32
+
+
+def pad_to_lanes(k: int) -> int:
+    return (k + LANE_BITS - 1) // LANE_BITS * LANE_BITS
+
+
+def bitplanes(q: jax.Array, bits: int) -> jax.Array:
+    """Split integer codes into 1-bit planes: (..., K) -> (bits, ..., K)."""
+    shifts = jnp.arange(bits, dtype=q.dtype).reshape((bits,) + (1,) * q.ndim)
+    return (q[None] >> shifts) & 1
+
+
+def pack_bits(bit_planes: jax.Array) -> jax.Array:
+    """Pack the trailing axis of 0/1 ints into uint32 words.
+
+    (..., K) with K % 32 == 0  ->  (..., K // 32) uint32.
+    """
+    k = bit_planes.shape[-1]
+    if k % LANE_BITS:
+        raise ValueError(f"K={k} must be a multiple of {LANE_BITS}; pad first")
+    b = bit_planes.astype(jnp.uint32).reshape(*bit_planes.shape[:-1], k // LANE_BITS, LANE_BITS)
+    weights = (jnp.uint32(1) << jnp.arange(LANE_BITS, dtype=jnp.uint32))
+    return (b * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array, k: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`: (..., K//32) uint32 -> (..., K) int32."""
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*packed.shape[:-1], packed.shape[-1] * LANE_BITS)[..., :k].astype(jnp.int32)
+
+
+def slice_and_pack(q: jax.Array, bits: int) -> jax.Array:
+    """Quantized codes (..., K) -> packed planes (bits, ..., ceil(K/32)) uint32.
+
+    Pads K up to a lane multiple with zeros (zeros are AND-neutral, so padding
+    never perturbs popcount results — the paper's "blocked program current"
+    for unselected columns is the same trick).
+    """
+    k = q.shape[-1]
+    kp = pad_to_lanes(k)
+    if kp != k:
+        pad = [(0, 0)] * (q.ndim - 1) + [(0, kp - k)]
+        q = jnp.pad(q, pad)
+    return pack_bits(bitplanes(q, bits))
+
+
+def plane_weights(a_bits: int, w_bits: int) -> jax.Array:
+    """2^(n+m) weights of Eq. 1, shaped (a_bits, w_bits) f32."""
+    n = jnp.arange(a_bits, dtype=jnp.float32)[:, None]
+    m = jnp.arange(w_bits, dtype=jnp.float32)[None, :]
+    return jnp.exp2(n + m)
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Per-element population count of uint32 words -> int32."""
+    return jax.lax.population_count(x).astype(jnp.int32)

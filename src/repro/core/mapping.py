@@ -1,0 +1,124 @@
+"""The paper's data-mapping scheme as a tiling planner (§4.1, Fig. 8 & 12).
+
+On NAND-SPIN the mapping is: input bit-planes resident one-per-subarray
+(256 rows x 128 cols), the weight plane in a small buffer reused across the
+whole input plane (one buffer write per plane), and bit-count partial sums
+"cross-written" into disjoint columns of an accumulator subarray.
+
+On TPU the same three decisions become:
+  * which operand is stationary in VMEM        -> the weight block (buffer)
+  * the tile shape streamed from HBM           -> BlockSpec block shapes
+  * where partial sums accumulate              -> a VMEM accumulator tile that
+                                                  persists across the K grid
+                                                  axis (cross-writing)
+
+This module picks the block shapes; :mod:`repro.kernels.bitserial_matmul`
+consumes them, and :mod:`repro.pim.mapper` uses the subarray variant for the
+architecture simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+LANE = 128          # TPU lane width (and the paper's subarray column count)
+SUBLANE = 8         # f32/i32 sublane count
+WORD_BITS = 32
+
+# Paper subarray geometry (§5.2): 256 rows x 128 columns.
+SUBARRAY_ROWS = 256
+SUBARRAY_COLS = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    bm: int            # rows of A per tile (batch-ish dim)
+    bk_words: int      # packed K words per tile (bk_words * 32 input bits)
+    bn: int            # output columns per tile
+    grid: tuple        # (m_tiles, n_tiles, k_tiles)
+    vmem_bytes: int    # working-set estimate for one grid step
+
+    @property
+    def bk_bits(self) -> int:
+        return self.bk_words * WORD_BITS
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def plan_matmul(
+    m: int,
+    k: int,
+    n: int,
+    a_bits: int = 8,
+    w_bits: int = 8,
+    vmem_budget: int = 8 * 1024 * 1024,
+) -> TilePlan:
+    """Choose VMEM tile shapes for the packed bit-serial matmul.
+
+    Heuristics (mirroring the paper's buffer-reuse argument):
+      * bn is lane-aligned (128) — one output lane group per "subarray column".
+      * bm is sublane-aligned (8); grow it while VMEM allows, because the
+        weight tile is reused bm times per load (weight-stationary reuse).
+      * bk_words covers K when possible so the accumulator never round-trips
+        to HBM (the cross-writing property); otherwise K is gridded and the
+        accumulator tile persists across the k grid axis.
+    """
+    kw = _round_up(max(k, 1), WORD_BITS) // WORD_BITS
+    bn = min(_round_up(n, LANE), 512)
+    bk_words = min(kw, 512)  # 512 words = 16k bits of K per step
+
+    def ws(bm, bkw, bn_):
+        a_tile = a_bits * bm * bkw * 4
+        w_tile = w_bits * bn_ * bkw * 4
+        acc = bm * bn_ * 4
+        return a_tile + w_tile + acc
+
+    bm = SUBLANE
+    while bm < 256 and ws(bm * 2, bk_words, bn) <= vmem_budget and bm * 2 <= _round_up(m, SUBLANE):
+        bm *= 2
+    while ws(bm, bk_words, bn) > vmem_budget and bk_words > SUBLANE:
+        bk_words //= 2
+    grid = (
+        math.ceil(m / bm),
+        math.ceil(n / bn),
+        math.ceil(kw / bk_words),
+    )
+    return TilePlan(bm=bm, bk_words=bk_words, bn=bn, grid=grid, vmem_bytes=ws(bm, bk_words, bn))
+
+
+@dataclasses.dataclass(frozen=True)
+class SubarrayPlan:
+    """How one conv/matmul layer maps onto physical subarrays (paper Fig. 12)."""
+
+    input_planes: int       # = activation bits; one subarray set per plane
+    weight_planes: int      # = weight bits; broadcast through buffers
+    rows_per_pass: int      # input rows resident per subarray pass
+    cols: int               # output columns per subarray (bit-counters)
+    passes: int             # sequential passes over the subarray grid
+    and_ops: int            # total AND-plane row operations
+    buffer_writes: int      # weight buffer programming events
+
+
+def plan_subarrays(m: int, k: int, n: int, a_bits: int, w_bits: int,
+                   rows: int = SUBARRAY_ROWS, cols: int = SUBARRAY_COLS) -> SubarrayPlan:
+    """Map an (M,K,N) contraction onto the paper's subarray geometry.
+
+    Each subarray holds one activation bit-plane tile (rows x cols bits);
+    every weight plane row triggers one AND + bitcount across all columns in
+    parallel (Fig. 8 step semantics).
+    """
+    col_tiles = math.ceil(n / cols)
+    row_tiles = math.ceil(m / rows)
+    k_steps = k  # one AND per contraction element row (serial rows, parallel cols)
+    passes = row_tiles * col_tiles
+    return SubarrayPlan(
+        input_planes=a_bits,
+        weight_planes=w_bits,
+        rows_per_pass=min(m, rows),
+        cols=min(n, cols),
+        passes=passes,
+        and_ops=a_bits * w_bits * k_steps * passes,
+        buffer_writes=w_bits * col_tiles,
+    )

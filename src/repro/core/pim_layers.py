@@ -1,0 +1,136 @@
+"""PIM-style quantized layers — the paper's technique as drop-in modules.
+
+``PIMLinear``/``PIMConv2D`` are what the framework exposes to model code:
+any dense projection (CNN conv, transformer QKVO/FFN) can be switched to the
+paper's bit-serial execution by config (`PIMQuantConfig` on an arch config).
+
+Execution modes:
+  * training      -> fake-quant with STE (QAT; beyond-paper, see DESIGN.md)
+  * inference     -> Eq. 1 bit-serial matmul on the selected backend
+                     ("popcount" | "mxu-plane" | "int-direct" | "pallas")
+
+Conv2D lowers to the same integer matmul via im2col, exactly how the paper
+lowers convolution onto subarray dot products (a sliding window *is* the
+row-activation schedule of Fig. 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .bitserial import quantized_matmul
+from .quantize import calibrate_minmax, fake_quant, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class PIMQuantConfig:
+    w_bits: int = 8
+    a_bits: int = 8
+    backend: str = "int-direct"  # cheapest exact backend; "popcount"/"pallas" = paper dataflow
+    enabled: bool = True
+
+    @property
+    def tag(self) -> str:
+        return f"<{self.w_bits}:{self.a_bits}>"
+
+
+def _constrain_weight(w: jax.Array, role: str) -> jax.Array:
+    """Pin a 2D weight's at-use sharding so GSPMD gathers the FSDP shards
+    instead of partial-reducing the (much larger) activation outputs.
+
+    role "io": (d_in, d_out) — d_in is FSDP-sharded at rest: gather it;
+               keep d_out on the TP axis (output stays head/hidden-sharded).
+    role "tp_in": (d_hidden, d_out) — d_hidden stays TP-sharded (the
+               contraction's partial-sum all-reduce is the inherent TP
+               collective); the FSDP axis on d_out gathers.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as sh
+
+    mesh = sh.get_mesh()
+    if mesh is None or w.ndim != 2 or "model" not in mesh.axis_names:
+        return w
+    tp = sh.axis_size(mesh, "model")
+    if role == "tp_in":
+        spec = P("model" if w.shape[0] % tp == 0 else None, None)
+    else:
+        spec = P(None, "model" if w.shape[1] % tp == 0 else None)
+    return sh.constrain(w, spec)
+
+
+def pim_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    cfg: PIMQuantConfig | None = None,
+    train: bool = False,
+    role: str = "io",
+) -> jax.Array:
+    """y = x @ w (+ b) through the paper's bit-serial pipeline.
+
+    ``x``: (..., K) float; ``w``: (K, N) float master weights. ``role``
+    picks the at-use sharding policy (see ``_constrain_weight``).
+    """
+    w = _constrain_weight(w, role)
+    if cfg is None or not cfg.enabled:
+        y = x @ w.astype(x.dtype)
+    elif train:
+        # QAT: quantization error in the forward pass, STE gradients.
+        xq = fake_quant(x, cfg.a_bits)
+        wq = fake_quant(w, cfg.w_bits)
+        y = xq @ wq.astype(xq.dtype)
+    else:
+        y = quantized_matmul(
+            x, w, a_bits=cfg.a_bits, w_bits=cfg.w_bits, backend=cfg.backend
+        ).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> tuple[jax.Array, int, int]:
+    """NHWC -> (N*OH*OW, KH*KW*C) patches."""
+    n, h, w, c = x.shape
+    x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    idx_h = stride * jnp.arange(oh)[:, None] + jnp.arange(kh)[None, :]
+    idx_w = stride * jnp.arange(ow)[:, None] + jnp.arange(kw)[None, :]
+    patches = x[:, idx_h[:, None, :, None], idx_w[None, :, None, :], :]
+    # (n, oh, ow, kh, kw, c) -> (n*oh*ow, kh*kw*c)
+    return patches.reshape(n * oh * ow, kh * kw * c), oh, ow
+
+
+def pim_conv2d(
+    x: jax.Array,          # NHWC
+    w: jax.Array,          # (KH, KW, C, O)
+    b: jax.Array | None = None,
+    stride: int = 1,
+    padding: int = 0,
+    cfg: PIMQuantConfig | None = None,
+    train: bool = False,
+) -> jax.Array:
+    kh, kw, c, o = w.shape
+    if cfg is None or not cfg.enabled:
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(padding, padding)] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return y + b if b is not None else y
+    cols, oh, ow = _im2col(x, kh, kw, stride, padding)
+    y = pim_linear(cols, w.reshape(kh * kw * c, o), b, cfg, train)
+    return y.reshape(x.shape[0], oh, ow, o)
+
+
+def prepack_weights(w: jax.Array, cfg: PIMQuantConfig):
+    """Deployment helper: quantize weights once (paper: program subarrays once).
+
+    Returns (codes, QuantParams) for reuse with
+    ``bitserial.quantized_matmul(..., wq=wq, qw=codes)``.
+    """
+    wq = calibrate_minmax(w, cfg.w_bits)
+    return quantize(w, wq), wq

@@ -1,0 +1,76 @@
+"""Distributed-optimization tricks: gradient compression & overlap hooks.
+
+Int8 gradient compression with error feedback (1-bit-Adam family): each
+gradient leaf is scaled to int8, the quantization residual is carried in a
+persistent error-feedback buffer and re-added next step — unbiased in the
+long run, 4x less cross-pod traffic. Used for the *pod* axis (pure DP,
+rides the slowest links); in-pod FSDP reduce-scatters stay full precision.
+
+Under GSPMD the cross-pod sum happens implicitly during backward, so the
+compression here is applied where it is explicit and correct for any
+sharding: simulate-compress the summed gradient (quantize + dequantize +
+error feedback). The *traffic* saving on real DCN additionally needs the
+collective itself to run on int8 — that variant is provided as
+``compressed_psum`` for shard_map-based pod reductions and exercised in
+tests on a CPU mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    bits: int = 8
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(g: jax.Array, err: jax.Array, bits: int = 8):
+    """Quantize g+err per-leaf symmetric int<bits>; return (g_hat, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(gf)) / qmax + 1e-30
+    q = jnp.clip(jnp.round(gf / scale), -qmax, qmax)
+    g_hat = q * scale
+    return g_hat, gf - g_hat
+
+
+def make_grad_compressor(cfg: CompressionConfig):
+    """Pytree-level wrapper used by the train step (error feedback threaded
+    through opt_state by the caller via closure state)."""
+    if not cfg.enabled:
+        return None
+
+    def compress(grads, err_tree):
+        out = jax.tree.map(
+            lambda g, e: compress_decompress(g, e, cfg.bits), grads, err_tree)
+        g_hat = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_err = jax.tree.map(lambda t: t[1], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        return g_hat, new_err
+
+    return compress
+
+
+def compressed_psum(x: jax.Array, axis_name: str, bits: int = 8) -> jax.Array:
+    """int8-on-the-wire psum for shard_map pod reductions.
+
+    Quantizes locally, sums the int values (exact in int32 for <=2^23/qmax
+    participants), then dequantizes with the max of the per-participant
+    scales — a standard all-reduce-compatible compression scheme.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(x)) / qmax + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    qsum = jax.lax.psum(q, axis_name)
+    smax = jax.lax.pmax(scale, axis_name)
+    return qsum.astype(jnp.float32) * smax

@@ -1,0 +1,275 @@
+"""Sharding rules: parameter/optimizer/activation/state PartitionSpecs.
+
+Axis semantics on the production mesh (see ``repro.launch.mesh``):
+
+  pod    pure data parallelism across pods (gradient all-reduce via ICI/DCN)
+  data   FSDP: batch sharding for activations AND parameter/optimizer-state
+         sharding (ZeRO-3 style) — params gather on use, grads reduce-scatter
+  model  tensor parallelism: attention heads / FFN hidden / expert dim
+
+Rules are name-based (we own every init function, so names are total) with
+a divisibility guard: any rule axis that does not divide the corresponding
+dimension is dropped (replicated) rather than relying on GSPMD padding —
+keeps the dry-run portable and the collective schedule predictable.
+
+MoE experts: the expert dim shards on "model" when it divides the axis
+(phi3.5: 16e on 16-way TP = pure expert parallelism); otherwise the expert
+FFN hidden dim shards instead (grok: 8e -> TP inside every expert).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Mesh context (set by launchers; model code stays mesh-agnostic)
+# ---------------------------------------------------------------------------
+
+_MESH: Mesh | None = None
+_TIED = False
+
+
+def set_mesh(mesh: Mesh | None):
+    global _MESH
+    _MESH = mesh
+
+
+def set_tied_embeddings(tied: bool):
+    """Tied-embedding models keep vocab on the TP axis (the lm_head matmul
+    wants it); untied models shard vocab on FSDP only (cheap token gather)."""
+    global _TIED
+    _TIED = tied
+
+
+def get_mesh() -> Mesh | None:
+    return _MESH
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Axes that shard the batch (pure DP + FSDP axes)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, *axes) -> int:
+    out = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            out *= mesh.shape[a]
+    return out
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint if a mesh is active, else identity."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin an activation's batch dim to the DP axes (identity without mesh).
+
+    GSPMD occasionally replicates the batch through scan carries when a
+    badly-sharded producer (e.g. a vocab-sharded embedding gather) feeds the
+    loop — a silent n_data x compute blowup that this constraint prevents.
+    Skipped when the batch does not divide the DP axes (long_500k's B=1).
+    """
+    if _MESH is None:
+        return x
+    dp = dp_axes(_MESH)
+    if not dp or x.shape[batch_dim] % axis_size(_MESH, *dp) != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = dp
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# name -> spec template over the *logical* dims of that parameter.
+# "fsdp" -> data axis, "tp" -> model axis, None -> replicated dim.
+_PARAM_RULES = {
+    # embeddings / head. The untied embedding shards vocab on FSDP only:
+    # a TP-sharded vocab makes the token gather reshard through a full
+    # rematerialization (measured in the grok §Perf iterations). Tied
+    # embeddings switch back to vocab-on-TP via ``set_tied_embeddings``.
+    "embed": (None, "fsdp"),          # (vocab, d)
+    "head": ("fsdp", "tp"),           # (d, vocab)
+    # attention
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    "q_norm": (None,), "k_norm": (None,), "gate": (),
+    # mlp
+    "w_in": ("fsdp", "tp"),
+    "w_gate": ("fsdp", "tp"),
+    "w_out": ("tp", "fsdp"),
+    # moe (3D expert weights handled specially below)
+    "router": ("fsdp", None),
+    # rglru
+    "w_x": ("fsdp", "tp"),
+    "conv": (None, "tp"),
+    "w_a": ("fsdp", "tp"),
+    "w_i": ("fsdp", "tp"),
+    "b_a": ("tp",), "b_i": ("tp",), "lam": ("tp",),
+    # rwkv
+    "w_r": ("fsdp", "tp"),
+    "w_k": ("fsdp", "tp"),
+    "w_v": ("fsdp", "tp"),
+    "w_g": ("fsdp", "tp"),
+    "w_o": ("tp", "fsdp"),
+    "decay_a": ("fsdp", None),
+    "decay_b": (None, "fsdp"),
+    "w0": (None,), "mu": (None, None), "u": (None, None), "ln_scale": (None, None),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+_MOE_3D = {"w_in", "w_gate", "w_out"}
+
+
+def _axis_for(tag, mesh: Mesh):
+    if tag == "fsdp":
+        # Multi-pod: params/optimizer shard across pods too (ZeRO across the
+        # full fleet); the cross-pod all-gather overlaps with compute.
+        if "pod" in mesh.axis_names and "data" in mesh.axis_names:
+            return ("pod", "data")
+        return "data" if "data" in mesh.axis_names else None
+    if tag == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    return None
+
+
+def _guard(spec_axes: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Drop axes that don't divide the dim; pad spec to the leaf's rank."""
+    spec = list(spec_axes) + [None] * (len(shape) - len(spec_axes))
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        sz = axis_size(mesh, *axes)
+        out.append(ax if sz > 1 and dim % sz == 0 else None)
+    return P(*out)
+
+
+def _param_spec(path, leaf, mesh: Mesh, n_experts: int | None) -> P:
+    names = [k.key for k in path if hasattr(k, "key")]
+    name = names[-1] if names else ""
+    stacked = "scan" in names  # scan-stacked params carry a leading reps axis
+    in_moe = "ffn" in names and leaf.ndim - (1 if stacked else 0) == 3
+
+    if in_moe and name in _MOE_3D:
+        # (E, d, f) or (E, f, d): expert-parallel when E divides the TP axis,
+        # else TP inside each expert on the f dim.
+        tp = axis_size(mesh, "model")
+        e = leaf.shape[1 if stacked else 0]
+        if tp > 1 and e % tp == 0:
+            spec = ("tp", "fsdp", None) if name != "w_out" else ("tp", None, "fsdp")
+        else:
+            spec = (None, "fsdp", "tp") if name != "w_out" else (None, "tp", "fsdp")
+    elif "channel_mix" in names and name == "w_v":
+        spec = ("tp", "fsdp")          # rwkv channel-mix down-proj is (f, d)
+    elif name == "embed" and _TIED:
+        spec = ("tp", "fsdp")
+    elif name in _PARAM_RULES:
+        spec = _PARAM_RULES[name]
+    else:
+        spec = tuple(None for _ in leaf.shape)
+
+    spec = tuple(_axis_for(t, mesh) for t in spec)
+    if stacked:
+        spec = (None,) + spec
+        shape = leaf.shape
+    else:
+        shape = leaf.shape
+    return _guard(spec, shape, mesh)
+
+
+def param_shardings(params_tree, mesh: Mesh, n_experts: int | None = None):
+    """Map a param pytree (arrays or ShapeDtypeStructs) -> NamedShardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, _param_spec(p, l, mesh, n_experts)),
+        params_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / state rules
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, global_batch: int, rank: int = 2) -> P:
+    """Tokens/labels (B, S, ...) — batch over DP axes when divisible."""
+    dp = dp_axes(mesh)
+    if dp and global_batch % axis_size(mesh, *dp) == 0:
+        return P(dp, *(None,) * (rank - 1))
+    return P(*(None,) * rank)
+
+
+def batch_shardings(batch_tree, mesh: Mesh, global_batch: int):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(mesh, global_batch, l.ndim)),
+        batch_tree)
+
+
+def _state_spec(path, leaf, mesh: Mesh, global_batch: int) -> P:
+    names = [k.key for k in path if hasattr(k, "key")]
+    name = names[-1] if names else ""
+    dp = dp_axes(mesh)
+    b_ok = dp and global_batch % axis_size(mesh, *dp) == 0
+    # Layer states may be scan-stacked (leading reps axis) — detect by rank.
+    if name in ("k", "v"):
+        # KV cache (B, S, H, hd): shard the SEQUENCE on the TP axis
+        # (flash-decoding layout) — every model shard owns a contiguous
+        # KV chunk, attention softmax combines via tiny partial-stat
+        # all-reduces, and the per-token scatter update lands on one
+        # shard. Sharding head_dim instead forced whole-cache gathers
+        # (measured: 28 GB/step on llama decode_32k, §Perf).
+        seq_dim = len(leaf.shape) - 3
+        seq_ok = leaf.shape[seq_dim] % axis_size(mesh, "model") == 0
+        spec = (dp if b_ok else None, "model" if seq_ok else None, None, None)
+    elif name in ("k_scale", "v_scale"):   # int8 KV scales (B, S, H)
+        seq_ok = leaf.shape[-2] % axis_size(mesh, "model") == 0
+        spec = (dp if b_ok else None, "model" if seq_ok else None, None)
+    elif name == "wkv":          # (B, H, D, D)
+        spec = (dp if b_ok else None, None, None, None)
+    elif name in ("tm_shift", "cm_shift", "h"):   # (B, d)
+        spec = (dp if b_ok else None, "model")
+    elif name == "conv":         # (B, K-1, W)
+        spec = (dp if b_ok else None, None, "model")
+    elif name == "length":
+        return P()
+    else:
+        spec = tuple(None for _ in leaf.shape)
+    if len(spec) < leaf.ndim:    # stacked: prepend None for the reps axis
+        spec = (None,) * (leaf.ndim - len(spec)) + tuple(spec)
+    return _guard(tuple(spec), leaf.shape, mesh)
+
+
+def state_shardings(state_tree, mesh: Mesh, global_batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, _state_spec(p, l, mesh, global_batch)),
+        state_tree)
+
+
+def constrain_kv_update(k_new):
+    """Pin a multi-token KV update (B, S_new, H, hd) to the cache's
+    flash-decoding layout (batch on DP, sequence on TP) BEFORE the scatter —
+    otherwise GSPMD reshards the whole prefill KV through the scatter
+    (measured: 2-5x collective-term regressions on prefill cells)."""
+    if _MESH is None or k_new.ndim != 4 or k_new.shape[1] == 1:
+        return k_new
+    dp = dp_axes(_MESH)
+    b_ok = dp and k_new.shape[0] % axis_size(_MESH, *dp) == 0
+    seq_ok = ("model" in _MESH.axis_names
+              and k_new.shape[1] % axis_size(_MESH, "model") == 0)
+    spec = P(dp if b_ok else None, "model" if seq_ok else None, None, None)
+    return jax.lax.with_sharding_constraint(k_new, NamedSharding(_MESH, spec))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

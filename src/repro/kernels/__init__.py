@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (Eq. 1).
+
+  bitserial_matmul.py  packed AND+popcount matmul (pl.pallas_call + BlockSpec)
+  bitplane_pack.py     fused bit-plane slice + lane pack
+  ops.py               jit'd public wrappers (interpret=True off-TPU)
+  ref.py               pure-jnp oracles
+"""
+from .ops import bitserial_matmul, pack_planes
+
+__all__ = ["bitserial_matmul", "pack_planes"]

@@ -1,0 +1,51 @@
+"""Pallas kernel: fused bit-plane slice + uint32 lane pack.
+
+Takes integer codes (M, K) int32 (K % 32 == 0) and emits the packed planes
+(bits, M, K//32) uint32 consumed by :mod:`.bitserial_matmul`. One pass over
+the codes produces all planes — on NAND-SPIN this is the "program each
+bit-plane into its subarray" step; on TPU it is a single VMEM-resident
+shift/mask/reduce, so quantize->pack never spills intermediates to HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, o_ref, *, bits: int, bm: int, bkw: int):
+    q = q_ref[...].astype(jnp.uint32)            # (bm, bkw*32)
+    q = q.reshape(bm, bkw, 32)
+    lane_w = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, None, :]
+    for b in range(bits):                         # static unroll over planes
+        plane = (q >> jnp.uint32(b)) & jnp.uint32(1)
+        o_ref[b] = (plane * lane_w).sum(-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bkw", "interpret"))
+def bitplane_pack(
+    q: jax.Array,  # (M, K) int32 codes in [0, 2^bits)
+    *,
+    bits: int,
+    bm: int = 256,
+    bkw: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = q.shape
+    if k % 32:
+        raise ValueError("K must be a multiple of 32 (pad with zeros first)")
+    kw = k // 32
+    bm = min(bm, m)
+    bkw = min(bkw, kw)
+    if m % bm or kw % bkw:
+        raise ValueError(f"({m},{kw}) not divisible by blocks ({bm},{bkw})")
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, bm=bm, bkw=bkw),
+        grid=(m // bm, kw // bkw),
+        in_specs=[pl.BlockSpec((bm, bkw * 32), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bits, bm, bkw), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bits, m, kw), jnp.uint32),
+        interpret=interpret,
+    )(q)

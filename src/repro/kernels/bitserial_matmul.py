@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for the paper's Eq. 1 bit-serial matmul.
+
+Computes ``P[b, o] = sum_{n,m} 2^(n+m) * popcount(pa[n, b, :] & pw[m, o, :])``
+over packed uint32 bit-planes — the NAND-SPIN subarray dataflow mapped onto
+the TPU memory hierarchy:
+
+  HBM             packed activation planes + packed weight planes
+  VMEM (BlockSpec)  one (bm x bkw) activation tile per plane, one (bn x bkw)
+                    weight tile per plane  (== the paper's weight buffer)
+  VREG/VPU        lane-wise AND + population_count  (== sense-amp AND + column
+                    bit-counter)
+  VMEM accumulator  output tile revisited across the K grid axis (== the
+                    paper's cross-written partial sums staying in-mat)
+
+Grid = (m_tiles, n_tiles, k_tiles) with K innermost, so the int32 output
+block stays resident in VMEM while partial popcounts accumulate — partial
+sums never round-trip to HBM, which is exactly the property the paper's
+cross-writing scheme buys on NAND-SPIN.
+
+The (bm, chunk, bkw) broadcast intermediate is tiled by an inner fori_loop
+over output-column chunks of 128 lanes to bound VREG/VMEM pressure
+(`_OC` below); the MXU is idle in this kernel by design — Eq. 1 is a pure
+VPU bit-op pipeline. See ``mxu_plane`` in :mod:`repro.core.bitserial` for
+the systolic alternative, and DESIGN.md §2 for the trade-off experiment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-column chunk for the inner loop: one lane group.
+_OC = 128
+
+
+def _kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int, bm: int, bn: int,
+            bkw: int):
+    # Zero the accumulator tile on the first K step (grid axis 2 innermost).
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def oc_body(c, acc):
+        # acc: (bm, bn) int32. Process output columns [c*_OC, (c+1)*_OC).
+        partial = jnp.zeros((bm, _OC), jnp.int32)
+        for n in range(a_bits):          # static unroll: plane pairs
+            a = a_ref[n]                 # (bm, bkw) uint32
+            for m in range(w_bits):
+                w = jax.lax.dynamic_slice(w_ref[m], (c * _OC, 0), (_OC, bkw))
+                # sense-amp AND + per-column bitcount, 32 cells per lane
+                cnt = jax.lax.population_count(a[:, None, :] & w[None, :, :])
+                partial += cnt.sum(-1).astype(jnp.int32) << (n + m)
+        return jax.lax.dynamic_update_slice(acc, partial, (0, c * _OC))
+
+    acc = jax.lax.fori_loop(0, bn // _OC, oc_body, jnp.zeros((bm, bn), jnp.int32))
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("a_bits", "w_bits", "bm", "bn", "bkw", "interpret")
+)
+def bitserial_matmul_packed(
+    pa: jax.Array,  # (a_bits, M, KW) uint32 packed activation planes
+    pw: jax.Array,  # (w_bits, N, KW) uint32 packed weight planes
+    *,
+    a_bits: int,
+    w_bits: int,
+    bm: int = 128,
+    bn: int = 128,
+    bkw: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-plane bit-serial matmul -> (M, N) int32."""
+    _, m, kw = pa.shape
+    _, n, _ = pw.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bkw = min(bkw, kw)
+    if m % bm or n % bn or kw % bkw or bn % _OC and bn != n:
+        raise ValueError(f"shape ({m},{n},{kw}) not divisible by blocks ({bm},{bn},{bkw})")
+    oc = min(_OC, bn)
+
+    grid = (m // bm, n // bn, kw // bkw)
+    kern = functools.partial(
+        _kernel, a_bits=a_bits, w_bits=w_bits, bm=bm, bn=bn, bkw=bkw
+    )
+    # small-N fallback for the inner chunking
+    if oc != _OC:
+        kern = functools.partial(
+            _small_kernel, a_bits=a_bits, w_bits=w_bits
+        )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a_bits, bm, bkw), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((w_bits, bn, bkw), lambda i, j, k: (0, j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(pa, pw)
+
+
+def _small_kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int):
+    """Variant without output-column chunking for narrow outputs."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for n in range(a_bits):
+        a = a_ref[n]
+        for m in range(w_bits):
+            w = w_ref[m]
+            cnt = jax.lax.population_count(a[:, None, :] & w[None, :, :])
+            acc += cnt.sum(-1).astype(jnp.int32) << (n + m)
+    o_ref[...] += acc

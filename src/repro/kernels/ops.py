@@ -1,0 +1,71 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the kernels run compiled; on CPU (this container) they run
+in ``interpret=True`` mode, which executes the kernel body in Python with
+identical semantics — that is how correctness is validated here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice
+from repro.core.mapping import plan_matmul
+
+from . import bitplane_pack as _pack
+from . import bitserial_matmul as _bsm
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_planes(q: jax.Array, bits: int, interpret: bool | None = None) -> jax.Array:
+    """Integer codes (M, K) -> packed planes (bits, M, ceil32(K)/32) uint32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, k = q.shape
+    kp = bitslice.pad_to_lanes(k)
+    if kp != k:
+        q = jnp.pad(q, ((0, 0), (0, kp - k)))
+    kw = kp // 32
+    # Block shapes must divide; fall back to whole-array blocks when small.
+    bm = m if m < 256 or m % 256 else 256
+    bkw = kw if kw < 128 or kw % 128 else 128
+    return _pack.bitplane_pack(q, bits=bits, bm=bm, bkw=bkw, interpret=interpret)
+
+
+def bitserial_matmul(
+    qa: jax.Array,  # (M, K) int codes
+    qw: jax.Array,  # (K, N) int codes
+    *,
+    a_bits: int,
+    w_bits: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Eq. 1 bit-serial integer matmul via the Pallas kernels -> (M, N) i32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, k = qa.shape
+    _, n = qw.shape
+    pa = pack_planes(qa, a_bits, interpret)
+    pw = pack_planes(qw.T, w_bits, interpret)
+    kw = pa.shape[-1]
+    plan = plan_matmul(m, k, n, a_bits, w_bits)
+    bm = _divisor_block(m, plan.bm)
+    bn = _divisor_block(n, plan.bn)
+    bkw = _divisor_block(kw, plan.bk_words)
+    return _bsm.bitserial_matmul_packed(
+        pa, pw, a_bits=a_bits, w_bits=w_bits, bm=bm, bn=bn, bkw=bkw,
+        interpret=interpret,
+    )
+
+
+def _divisor_block(dim: int, want: int) -> int:
+    """Largest block <= want that divides dim (Pallas grids need exact tiling)."""
+    b = min(want, dim)
+    while dim % b:
+        b -= 1
+    return b

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately naive (no blocking, no packing tricks beyond what the
+math needs) so that a mismatch always indicts the kernel, not the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice
+
+
+def bitserial_matmul_packed_ref(pa: jax.Array, pw: jax.Array) -> jax.Array:
+    """(a_bits, M, KW) x (w_bits, N, KW) packed planes -> (M, N) int32."""
+    a_bits, m, kw = pa.shape
+    w_bits, n, _ = pw.shape
+    out = jnp.zeros((m, n), jnp.int32)
+    for nb in range(a_bits):
+        for mb in range(w_bits):
+            cnt = jax.lax.population_count(pa[nb][:, None, :] & pw[mb][None, :, :])
+            out = out + (cnt.sum(-1).astype(jnp.int32) << (nb + mb))
+    return out
+
+
+def bitserial_matmul_codes_ref(qa: jax.Array, qw: jax.Array) -> jax.Array:
+    """End-to-end oracle from integer codes: plain integer matmul.
+
+    By Eq. 1 this equals the packed popcount pipeline exactly.
+    """
+    return jax.lax.dot_general(
+        qa.astype(jnp.int32), qw.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
+    )
+
+
+def bitplane_pack_ref(q: jax.Array, bits: int) -> jax.Array:
+    """(M, K) codes -> (bits, M, K//32) uint32."""
+    return bitslice.pack_bits(bitslice.bitplanes(q.astype(jnp.int32), bits))
+
+
+def wkv_chunked_ref(r, k, v, lw, u, s0):
+    """Sequential-scan oracle for the chunked WKV kernel.
+
+    r/k/v/lw (BH, S, D) f32 (lw = log decay <= 0); u (BH, D); s0 (BH, D, D).
+    """
+    w = jnp.exp(lw)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[:, :, None] * v_t[:, None, :]
+        y = jnp.einsum("bk,bkv->bv", r_t, S + u[:, :, None] * kv)
+        return w_t[:, :, None] * S + kv, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_last

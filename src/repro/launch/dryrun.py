@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and the production meshes need 512 host devices.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod or 2x16x16
+multi-pod), constructs ShapeDtypeStruct stand-ins for params / optimizer
+state / inputs with their production shardings, lowers the right step
+function (train_step for train shapes, prefill/serve_step for inference
+shapes), compiles it, and records memory + cost + collective analysis into
+results/dryrun/<arch>_<shape>_<mesh>.json — the raw material for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+__doc__ = _DOC
+# NOTE: no `from __future__ import annotations` here — future imports must be
+# the first statement in a file, and the XLA_FLAGS lines must come first.
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import (
+    abstract_params, decode_step, init_state, param_count, prefill,
+)
+from repro.models.lm.model import cast_params
+from repro.roofline import analysis as roofline
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _sds(tree):
+    """Concrete-or-abstract tree -> ShapeDtypeStructs."""
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+_ACCUM_OVERRIDE = [None]  # set by --accum (perf variants)
+
+
+def _accum_for(shape: ShapeSpec, mesh) -> int:
+    """Grad-accumulation factor: target <= 2 sequences per data shard."""
+    if _ACCUM_OVERRIDE[0]:
+        return _ACCUM_OVERRIDE[0]
+    dp = sh.axis_size(mesh, *sh.dp_axes(mesh))
+    per_shard = shape.global_batch // max(dp, 1)
+    return max(1, per_shard // 2)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeSpec, mesh):
+    """ShapeDtypeStructs + shardings for every model input of this cell."""
+    cfg = arch.model
+    b, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    batch = {}
+    if shape.kind == "train":
+        if cfg.embed_inputs:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        if cfg.embed_inputs:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+    else:  # decode: one new token against a seq_len-deep cache
+        if cfg.embed_inputs:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype)
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_image_tokens, cfg.d_model), dtype)
+    shardings = sh.batch_shardings(batch, mesh, b)
+    return batch, shardings
+
+
+def _count_arrays_bytes(tree) -> int:
+    return sum(math.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def lower_cell(arch: ArchConfig, shape: ShapeSpec, mesh, verbose=True):
+    """Lower + compile one cell; returns (compiled, report dict)."""
+    cfg = arch.model
+    chips = math.prod(mesh.devices.shape)
+    sh.set_mesh(mesh)
+    sh.set_tied_embeddings(cfg.tie_embeddings)
+    dtype = jnp.dtype(cfg.dtype)
+
+    params_abs = abstract_params(cfg, dtype)
+    p_shard = sh.param_shardings(params_abs, mesh)
+    batch, b_shard = input_specs(arch, shape, mesh)
+    n_params = param_count(cfg)
+    n_active = (cfg.n_active_params() if cfg.moe else n_params)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        ocfg = OptimizerConfig()
+        opt_abs = jax.eval_shape(partial(init_opt_state, ocfg), params_abs)
+        o_shard = sh.param_shardings(opt_abs, mesh)
+        o_shard["step"] = sh.replicated(mesh)
+        accum = _accum_for(shape, mesh)
+        step = make_train_step(cfg, ocfg, accum=accum)
+        metric_shard = {"loss": sh.replicated(mesh), "grad_norm": sh.replicated(mesh),
+                        "lr": sh.replicated(mesh)}
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, metric_shard),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_abs, opt_abs, _sds(batch))
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = roofline.train_model_flops(n_active, tokens)
+        extra = {"accum": accum}
+    else:
+        max_len = shape.seq_len
+        state_abs = jax.eval_shape(
+            partial(init_state, cfg, shape.global_batch, max_len))
+        s_shard = sh.state_shardings(state_abs, mesh, shape.global_batch)
+        logits_spec = P(sh.dp_axes(mesh)
+                        if shape.global_batch % sh.axis_size(mesh, *sh.dp_axes(mesh)) == 0
+                        else None, None,
+                        "model" if cfg.vocab % sh.axis_size(mesh, "model") == 0 else None)
+        logit_shard = NamedSharding(mesh, logits_spec)
+
+        if shape.kind == "prefill":
+            def fn(params, tokens, state, image_embeds=None):
+                return prefill(params, cfg, tokens, state, image_embeds=image_embeds)
+        else:
+            def fn(params, tokens, state, image_embeds=None):
+                return decode_step(params, cfg, tokens, state, image_embeds=image_embeds)
+
+        args = [params_abs, batch["tokens"], state_abs]
+        in_sh = [p_shard, b_shard["tokens"], s_shard]
+        if cfg.cross_attn_every:
+            args.append(batch["image_embeds"])
+            in_sh.append(b_shard["image_embeds"])
+        jitted = jax.jit(
+            fn,
+            in_shardings=tuple(in_sh),
+            out_shardings=(logit_shard, s_shard),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(*[_sds(a) if not isinstance(a, jax.ShapeDtypeStruct)
+                                 else a for a in args])
+        n_tok = shape.global_batch * (shape.seq_len if shape.kind == "prefill" else 1)
+        model_flops = roofline.decode_model_flops(n_active, n_tok)
+        extra = {"state_bytes": _count_arrays_bytes(state_abs)}
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo_text = compiled.as_text()
+    rf = roofline.from_compiled(compiled, chips, model_flops)
+    from repro.roofline import hlo_cost as _hc
+    cost = _hc.analyze(hlo_text)
+    try:
+        xla_ca = compiled.cost_analysis()
+        if isinstance(xla_ca, (list, tuple)):
+            xla_ca = xla_ca[0]
+        xla_ca = {k: float(v) for k, v in xla_ca.items()
+                  if k in ("flops", "bytes accessed")}
+    except Exception:
+        xla_ca = {}
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes") if hasattr(ma, k)}
+    except Exception as e:  # XLA:CPU may not implement it
+        mem = {"error": str(e)}
+
+    report = {
+        "arch": arch.arch_id,
+        "shape": shape.name,
+        "mesh": "x".join(map(str, mesh.devices.shape)) + ":" + ",".join(mesh.axis_names),
+        "chips": chips,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "param_bytes_per_chip": _count_arrays_bytes(params_abs) / chips,
+        "roofline": rf.report(),
+        "collectives": {"op_counts": cost.coll_counts,
+                        "bytes_by_kind": cost.coll_bytes,
+                        "wire_bytes_per_chip": cost.wire_bytes,
+                        "unknown_trip_loops": cost.unknown_loops},
+        "xla_cost_analysis_raw": xla_ca,
+        "memory_analysis": mem,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        **extra,
+    }
+    if verbose:
+        r = report["roofline"]
+        print(f"[{arch.arch_id} / {shape.name} / {report['mesh']}] "
+              f"compile {t_compile:.0f}s  bottleneck={r['bottleneck']} "
+              f"t=(c {r['t_compute_s']:.3e}, m {r['t_memory_s']:.3e}, "
+              f"n {r['t_collective_s']:.3e})s  roofline_frac={r['roofline_fraction']:.2f}")
+        if mem:
+            print("  memory_analysis:", mem)
+        print("  cost_analysis: flops/chip=%.3e bytes/chip=%.3e" %
+              (r["flops_per_chip"], r["hbm_bytes_per_chip"]))
+    return compiled, report
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
+             skip_existing: bool = False, save_hlo: bool = False,
+             overrides: dict | None = None, tag: str = "") -> dict | None:
+    arch = get_config(arch_id)
+    if overrides:
+        arch = dataclasses.replace(
+            arch, model=dataclasses.replace(arch.model, **overrides))
+    applicable = arch.applicable_shapes()[shape_name]
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = os.path.join(
+        out_dir, f"{arch_id}__{shape_name}__{mesh_tag}{suffix}.json")
+    if skip_existing and os.path.exists(out_path):
+        print(f"[skip existing] {out_path}")
+        return None
+    if isinstance(applicable, str):
+        report = {"arch": arch_id, "shape": shape_name, "mesh": mesh_tag,
+                  "skipped": applicable}
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"[{arch_id} / {shape_name}] SKIPPED: {applicable}")
+        return report
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    compiled, report = lower_cell(arch, applicable, mesh)
+    if tag:
+        report["variant"] = tag
+        report["overrides"] = {k: str(v) for k, v in (overrides or {}).items()}
+    if save_hlo:
+        import gzip
+        with gzip.open(out_path.replace(".json", ".hlo.txt.gz"), "wt") as f:
+            f.write(compiled.as_text())
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--set", action="append", default=[],
+                    help="model-config override field=value (perf variants)")
+    ap.add_argument("--tag", default="",
+                    help="variant tag appended to the result filename")
+    ap.add_argument("--accum", type=int, default=0,
+                    help="override grad-accumulation factor (perf variants)")
+    args = ap.parse_args()
+    if args.accum:
+        _ACCUM_OVERRIDE[0] = args.accum
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = (v if not v.lstrip("-").isdigit() else int(v)) \
+            if v not in ("true", "false") else v == "true"
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in cells:
+        try:
+            run_cell(a, s, mp, args.out, skip_existing=args.skip_existing,
+                     save_hlo=args.save_hlo, overrides=overrides, tag=args.tag)
+        except Exception as e:
+            print(f"[FAIL] {a}/{s}/{'2x16x16' if mp else '16x16'}: {e!r}")
+            failures.append((a, s, mp, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Single pod: 16x16 = 256 chips ("data" x "model"). Multi-pod: 2x16x16 = 512
+chips ("pod" x "data" x "model") — the pod axis is pure data parallelism
+(cross-pod all-reduce rides DCN/ICI), data is FSDP, model is tensor
+parallelism.
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+import math
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, found {len(devices)}; "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

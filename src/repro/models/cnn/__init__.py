@@ -1,0 +1,11 @@
+"""The paper's benchmark CNNs (AlexNet / VGG19 / ResNet50) in JAX.
+
+Each model exposes:
+  init(key, num_classes)   -> param pytree
+  apply(params, x, cfg)    -> logits (cfg: PIMQuantConfig | None)
+  layer_specs(hw, batch)   -> list[GemmSpec] consumed by the PIM simulator
+"""
+from . import alexnet, resnet, vgg
+from .specs import GemmSpec, model_specs, total_macs
+
+__all__ = ["alexnet", "vgg", "resnet", "GemmSpec", "model_specs", "total_macs"]

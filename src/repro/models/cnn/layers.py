@@ -1,0 +1,56 @@
+"""CNN building blocks on top of the PIM layers (paper §4.2 pipeline).
+
+Each block mirrors the paper's per-layer schedule: bit-serial convolution ->
+in-memory BN affine (Eq. 3 folded) -> ReLU via MSB test -> re-quantize
+(Eq. 2). In JAX the BN/ReLU/quant steps are ordinary elementwise ops; the
+PIM *simulator* charges them at their in-memory cost.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PIMQuantConfig, fold_batchnorm, pim_conv2d, pim_linear
+
+
+def init_conv(key, k, cin, cout, bn=True):
+    wkey, _ = jax.random.split(key)
+    fan_in = k * k * cin
+    p = {"w": jax.random.normal(wkey, (k, k, cin, cout)) * (2.0 / fan_in) ** 0.5}
+    if bn:
+        p.update(gamma=jnp.ones((cout,)), beta=jnp.zeros((cout,)),
+                 mean=jnp.zeros((cout,)), var=jnp.ones((cout,)))
+    else:
+        p["b"] = jnp.zeros((cout,))
+    return p
+
+
+def init_fc(key, cin, cout):
+    return {"w": jax.random.normal(key, (cin, cout)) * (2.0 / cin) ** 0.5,
+            "b": jnp.zeros((cout,))}
+
+
+def conv_block(p, x, stride=1, padding=0, cfg: PIMQuantConfig | None = None,
+               relu=True, train=False):
+    y = pim_conv2d(x, p["w"], p.get("b"), stride=stride, padding=padding,
+                   cfg=cfg, train=train)
+    if "gamma" in p:
+        scale, bias = fold_batchnorm(p["gamma"], p["beta"], p["mean"], p["var"])
+        y = y * scale + bias
+    if relu:
+        y = jax.nn.relu(y)  # paper: MSB test + conditional zero-write
+    return y
+
+
+def fc_block(p, x, cfg: PIMQuantConfig | None = None, relu=True, train=False):
+    y = pim_linear(x, p["w"], p["b"], cfg=cfg, train=train)
+    return jax.nn.relu(y) if relu else y
+
+
+def max_pool(x, k, s):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def avg_pool_global(x):
+    return x.mean(axis=(1, 2))

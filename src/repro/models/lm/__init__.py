@@ -1,0 +1,18 @@
+"""LM substrate: configs, blocks and whole-model entry points."""
+from .config import ModelConfig, MoEConfig
+from .model import (
+    abstract_params,
+    decode_step,
+    forward,
+    init,
+    init_state,
+    layer_plan,
+    loss_fn,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "abstract_params", "decode_step", "forward",
+    "init", "init_state", "layer_plan", "loss_fn", "param_count", "prefill",
+]

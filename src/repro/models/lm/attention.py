@@ -1,0 +1,210 @@
+"""Grouped-query attention with the variants the assigned archs need.
+
+Covers: MHA/GQA (any kv:q ratio), QKV bias (qwen1.5), per-head qk_norm
+(qwen3), sliding-window local attention (recurrentgemma), cross-attention
+over stub image embeddings (llama-3.2-vision), attention-logit softcap
+(grok), and the shared prefill/decode code path driven by explicit position
+tensors.
+
+All projections route through :func:`repro.core.pim_layers.pim_linear`, so
+an arch config with ``pim`` set executes every QKVO matmul through the
+paper's bit-serial pipeline (Eq. 1) — that is the integration point of the
+NAND-SPIN technique into the LM stack.
+
+Softmax runs in f32 with the usual max-subtraction; masked positions get
+``NEG`` rather than -inf so fully-masked rows (ring-buffer slots not yet
+written) produce zeros, not NaNs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pim_layers import pim_linear
+
+from .config import ModelConfig
+from .norms import qk_head_norm
+from .rope import apply_rope
+
+NEG = -2.0**30
+
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, hq * hd), jnp.float32) * scale,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), jnp.float32) * scale,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), jnp.float32) * scale,
+        "wo": jax.random.normal(ks[3], (hq * hd, d), jnp.float32) * (hq * hd) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    if cross:
+        # cross-attn gate (llama-vision zero-init tanh gate)
+        p["gate"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def attention_mask(q_pos: jax.Array, kv_pos: jax.Array, window: int = 0,
+                   causal: bool = True) -> jax.Array:
+    """(B, Sq), (B, Skv) int32 -> (B, 1, Sq, Skv) bool (True = attend)."""
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    m = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        m &= k <= q
+    if window:
+        m &= k > q - window
+    return m[:, None, :, :]
+
+
+def gqa_scores_softmax_v(q, k, v, mask, softcap: float = 0.0,
+                         k_scale=None, v_scale=None):
+    """Core GQA attention. q (B,Sq,Hq,D), k/v (B,Skv,Hkv,D), mask (B,1,Sq,Skv).
+
+    K/V stay in their storage dtype through the einsums (f32 accumulation
+    via preferred_element_type); materializing an f32 copy of a 32k-token
+    cache costed 3x the decode memory floor (§Perf/llama-decode). Softmax
+    runs in f32; probabilities cast back to the value dtype for the PV
+    contraction (MXU-native layout).
+
+    int8 KV caches pass per-(token, head) ``k_scale``/``v_scale``
+    ((B, Skv, Hkv) f32): scales fold into the score tensor and the
+    probabilities respectively, so a dequantized cache never materializes.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = (q.astype(jnp.float32) * d**-0.5)
+    if jnp.issubdtype(k.dtype, jnp.floating):
+        qg = qg.astype(k.dtype)
+    qg = qg.reshape(b, sq, hkv, g, d)
+    # scores: (B, Hkv, G, Sq, Skv), accumulated in f32
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    if k_scale is not None:  # (B, Skv, Hkv) -> (B, Hkv, 1, 1, Skv)
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask[:, :, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = (p * v_scale.transpose(0, 2, 1)[:, :, None, None, :]).astype(q.dtype)
+    elif jnp.issubdtype(v.dtype, jnp.floating):
+        p = p.astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attention(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,                 # (B, Sq, d)
+    q_pos: jax.Array,             # (B, Sq)
+    kv_src: jax.Array | None = None,   # cross-attn memory (B, Skv, d)
+    cache: dict | None = None,    # KV cache dict (decode / ring)
+    cache_index: jax.Array | None = None,
+    window: int = 0,
+    causal: bool = True,
+    ring: bool = False,
+    train: bool = False,
+):
+    """One attention block. Returns (out (B,Sq,d), updated_cache | None)."""
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, sq, _ = x.shape
+    pim = cfg.pim
+
+    q = pim_linear(x, p["wq"], p.get("bq"), cfg=pim, train=train)
+    q = q.reshape(b, sq, hq, hd)
+    if kv_src is None:
+        kv_in = x
+        kv_pos_new = q_pos
+    else:
+        kv_in = kv_src
+        kv_pos_new = jnp.broadcast_to(
+            jnp.arange(kv_src.shape[1], dtype=jnp.int32)[None], (b, kv_src.shape[1]))
+    k = pim_linear(kv_in, p["wk"], p.get("bk"), cfg=pim, train=train)
+    v = pim_linear(kv_in, p["wv"], p.get("bv"), cfg=pim, train=train)
+    k = k.reshape(b, kv_in.shape[1], hkv, hd)
+    v = v.reshape(b, kv_in.shape[1], hkv, hd)
+
+    if cfg.qk_norm:
+        q = qk_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = qk_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if kv_src is None:  # RoPE only for self-attention
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, kv_pos_new, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        from . import cache as C
+
+        if kv_src is not None:
+            # Cross-attn: image KV computed once at prefill, then reused.
+            if cache_index is None:
+                write = jnp.ones((b,), bool)
+            else:
+                write = jnp.broadcast_to(cache_index == 0, (b,))
+            new_cache = jax.tree.map(
+                lambda old, new: jnp.where(
+                    write.reshape((b,) + (1,) * (old.ndim - 1)),
+                    new.astype(old.dtype), old),
+                cache, {"k": k, "v": v})
+            k, v = new_cache["k"], new_cache["v"]
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(k.shape[1], dtype=jnp.int32)[None], (b, k.shape[1]))
+            mask = jnp.ones((b, 1, sq, k.shape[1]), bool)  # attend to all image tokens
+        elif ring:
+            wsize = cache["k"].shape[1]
+            if sq == 1:
+                new_cache = C.update_ring_cache(cache, k, v, cache_index)
+                k, v = new_cache["k"], new_cache["v"]
+                slot = jnp.arange(wsize, dtype=jnp.int32)[None]
+                # Slot s holds the largest position p <= index with p % w == s.
+                idx = jnp.broadcast_to(cache_index, (b,))[:, None] + sq - 1
+                kv_pos = idx - jnp.mod(idx - slot, wsize)   # (B, wsize)
+                mask = attention_mask(q_pos, kv_pos, window=window, causal=causal)
+                mask &= (kv_pos[:, None, None, :] >= 0)
+            else:
+                # Prefill: attend over the in-prompt window, then scatter the
+                # last `wsize` tokens into their p % w slots (fresh cache).
+                take = min(wsize, sq)
+                slots = q_pos[:, -take:] % wsize
+                bidx = jnp.arange(b)[:, None]
+                new_cache = {
+                    "k": cache["k"].at[bidx, slots].set(k[:, -take:].astype(cache["k"].dtype)),
+                    "v": cache["v"].at[bidx, slots].set(v[:, -take:].astype(cache["v"].dtype)),
+                }
+                kv_pos = q_pos
+                mask = attention_mask(q_pos, kv_pos, window=window, causal=causal)
+        else:
+            new_cache = C.update_kv_cache(cache, k, v, cache_index)
+            k, v = new_cache["k"], new_cache["v"]
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(k.shape[1], dtype=jnp.int32)[None], (b, k.shape[1]))
+            mask = attention_mask(q_pos, kv_pos, window=window, causal=causal)
+            valid = jnp.broadcast_to(cache_index, (b,))[:, None] + sq  # (B, 1)
+            mask &= (kv_pos < valid)[:, None, None, :]
+    else:
+        kv_pos = kv_pos_new
+        mask = attention_mask(q_pos, kv_pos, window=window,
+                              causal=causal and kv_src is None)
+
+    scales = {}
+    if new_cache is not None and "k_scale" in new_cache:
+        scales = {"k_scale": new_cache["k_scale"],
+                  "v_scale": new_cache["v_scale"]}
+    o = gqa_scores_softmax_v(q, k, v, mask, softcap=cfg.attn_softcap, **scales)
+    out = pim_linear(o.reshape(b, sq, hq * hd), p["wo"], cfg=pim, train=train,
+                     role="tp_in")
+    if "gate" in p:  # zero-init cross-attn gate
+        out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+    return out, new_cache

@@ -1,0 +1,156 @@
+"""Decode-time state: KV caches and recurrent states, as plain pytrees.
+
+Every layer kind owns a state factory + a functional update; ``serve_step``
+threads the whole-state pytree through ``jax.jit`` so the cache lives
+device-resident across steps (the serving engine never materializes it on
+host). Shapes are static — ``length`` is a traced scalar index.
+
+Hybrid/SSM archs keep O(1) decode state (the point of running them at the
+500k shape); local attention keeps a ring buffer of ``window`` tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, kv_len: int | None = None,
+                  dtype=jnp.bfloat16, force_float: bool = False):
+    n = kv_len if kv_len is not None else max_len
+    shape = (batch, n, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant and not force_float:
+        return {"k": jnp.zeros(shape, jnp.int8), "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def quantize_kv(x: jax.Array):
+    """Symmetric per-(token, head) int8 codes + f32 scales.
+
+    x (B, S, H, D) -> (codes int8, scale (B, S, H))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = amax / 127.0 + 1e-30
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def update_kv_cache(cache, k_new, v_new, index):
+    """Insert (B, S_new, H, D) at per-sequence offsets along the time axis.
+
+    ``index`` is (B,) (continuous batching: every slot has its own length)
+    or a scalar (uniform). Scatter-based so slots at different positions
+    coexist in one decode grid."""
+    from repro.distributed.sharding import constrain_kv_update
+
+    b, s_new = k_new.shape[:2]
+    k_new = constrain_kv_update(k_new)
+    v_new = constrain_kv_update(v_new)
+    if s_new == cache["k"].shape[1]:
+        # Full-length write (prefill into a same-length cache, index 0):
+        # replace outright — a dynamic scatter here makes GSPMD all-gather
+        # the seq-sharded cache (measured 0.24 TB/chip on prefill cells).
+        if "k_scale" in cache:
+            kq, ks = quantize_kv(k_new)
+            vq, vs = quantize_kv(v_new)
+            return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        return {"k": k_new.astype(cache["k"].dtype),
+                "v": v_new.astype(cache["v"].dtype)}
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (b,))
+    rows = idx[:, None] + jnp.arange(s_new, dtype=jnp.int32)[None, :]
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    if "k_scale" in cache:  # int8 KV: quantize the update, store scales
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        return {
+            "k": cache["k"].at[bidx, rows].set(kq, unique_indices=True),
+            "v": cache["v"].at[bidx, rows].set(vq, unique_indices=True),
+            "k_scale": cache["k_scale"].at[bidx, rows].set(ks, unique_indices=True),
+            "v_scale": cache["v_scale"].at[bidx, rows].set(vs, unique_indices=True),
+        }
+    k = cache["k"].at[bidx, rows].set(k_new.astype(cache["k"].dtype),
+                                      unique_indices=True)
+    v = cache["v"].at[bidx, rows].set(v_new.astype(cache["v"].dtype),
+                                      unique_indices=True)
+    return {"k": k, "v": v}
+
+
+def init_ring_cache(cfg: ModelConfig, batch: int, window: int, dtype=jnp.bfloat16):
+    """Sliding-window KV ring buffer for local_attn blocks (O(window) state).
+
+    Stays float: the window is small and ring slots rewrite constantly."""
+    return init_kv_cache(cfg, batch, window, dtype=dtype, force_float=True)
+
+
+def update_ring_cache(cache, k_new, v_new, index):
+    """Write (B, 1, H, D) at per-sequence slot ``index % window`` (decode)."""
+    b = k_new.shape[0]
+    window = cache["k"].shape[1]
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (b,))
+    slot = jnp.mod(idx, window)[:, None]
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    k = cache["k"].at[bidx, slot].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, slot].set(v_new.astype(cache["v"].dtype))
+    return {"k": k, "v": v}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),  # recurrence in f32
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    heads = cfg.d_model // cfg.rwkv_head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, cfg.d_model), dtype),   # last token (time-mix)
+        "cm_shift": jnp.zeros((batch, cfg.d_model), dtype),   # last token (channel-mix)
+        "wkv": jnp.zeros((batch, heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+    }
+
+
+def init_layer_state(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     n_image_tokens: int = 0, dtype=jnp.bfloat16):
+    if kind == "attn":
+        return init_kv_cache(cfg, batch, max_len, dtype=dtype)
+    if kind == "local_attn":
+        return init_ring_cache(cfg, batch, min(cfg.local_window or max_len, max_len), dtype=dtype)
+    if kind == "cross_attn":
+        # image KV is written once and reused — quantization buys nothing
+        return init_kv_cache(cfg, batch, n_image_tokens or cfg.n_image_tokens,
+                             dtype=dtype, force_float=True)
+    if kind == "rglru":
+        return init_rglru_state(cfg, batch)
+    if kind == "rwkv":
+        return init_rwkv_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_model_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Full decode state, shaped for the scan-over-units execution.
+
+    ``scan``: one stacked tree per unit position — leaves carry a leading
+    (n_reps,) axis so the layer scan consumes/produces them with NO
+    stack/unstack copies (those copies dominated decode HBM traffic before;
+    see EXPERIMENTS.md §Perf/llama-decode). ``rest``: per-layer states for
+    the unrolled remainder. ``length`` is (B,): every continuous-batching
+    slot decodes at its own position."""
+    from .model import layer_plan  # local import to avoid a cycle
+
+    unit, reps, rest = layer_plan(cfg)
+
+    def stacked(kind):
+        proto = init_layer_state(kind, cfg, batch, max_len, dtype=dtype)
+        return jax.tree.map(
+            lambda l: jnp.zeros((reps,) + l.shape, l.dtype), proto)
+
+    return {
+        "scan": [stacked(kind) for kind in unit],
+        "rest": [init_layer_state(kind, cfg, batch, max_len, dtype=dtype)
+                 for kind in rest],
+        "length": jnp.zeros((batch,), jnp.int32),
+    }

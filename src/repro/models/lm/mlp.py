@@ -1,0 +1,39 @@
+"""Feed-forward blocks: gated (llama-style) and plain (musicgen-style).
+
+Projections route through ``pim_linear``, so the paper's bit-serial
+quantized execution applies to FFNs exactly as it does to attention — FFN
+GEMMs are where most LM FLOPs live, i.e. where the NAND-SPIN technique pays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pim_layers import pim_linear
+
+from .config import ModelConfig
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def init_mlp(cfg: ModelConfig, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": jax.random.normal(ks[0], (d, f), jnp.float32) * d**-0.5,
+        "w_out": jax.random.normal(ks[1], (f, d), jnp.float32) * f**-0.5,
+    }
+    if cfg.act.endswith("gated"):
+        p["w_gate"] = jax.random.normal(ks[2], (d, f), jnp.float32) * d**-0.5
+    return p
+
+
+def mlp(p, cfg: ModelConfig, x: jax.Array, train: bool = False) -> jax.Array:
+    act = _ACTS[cfg.act.split("_")[0]]
+    h = pim_linear(x, p["w_in"], cfg=cfg.pim, train=train)
+    if "w_gate" in p:
+        g = pim_linear(x, p["w_gate"], cfg=cfg.pim, train=train)
+        h = act(g) * h
+    else:
+        h = act(h)
+    return pim_linear(h, p["w_out"], cfg=cfg.pim, train=train, role="tp_in")

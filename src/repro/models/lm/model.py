@@ -1,0 +1,349 @@
+"""LM assembly: embed -> block schedule -> head, for all assigned families.
+
+Layers execute through ``jax.lax.scan`` over the arch's *repeating unit*
+(dense: one block; recurrentgemma: (rglru, rglru, local_attn); vision:
+five self + one cross). Stacked-parameter scan keeps HLO size and compile
+time flat in depth — essential when the dry-run compiles 100-layer models
+on 512 host devices — and any remainder layers are unrolled after the scan.
+
+Three entry points, shared by training, serving and the dry-run:
+
+  ``forward(params, cfg, batch)``             -> logits (+ MoE aux loss)
+  ``loss_fn(params, cfg, batch)``             -> scalar xent (chunked option)
+  ``decode_step(params, cfg, tokens, state)`` -> (logits, new state)
+
+``init(cfg, key)`` builds real parameters; ``abstract_params(cfg)`` is the
+same tree as ShapeDtypeStructs (via ``jax.eval_shape``) for the dry-run,
+and ``param_count(cfg)`` the exact parameter count derived from it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pim_layers import pim_linear
+from repro.distributed.sharding import constrain_batch
+
+from . import attention as A
+from . import cache as C
+from . import mlp as M
+from . import moe as MOE
+from . import rglru as RG
+from . import rwkv6 as RW
+from .config import ModelConfig
+from .norms import apply_norm, init_norm
+
+
+# ---------------------------------------------------------------------------
+# Repeating-unit detection
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> tuple[tuple, int, tuple]:
+    """blocks -> (unit, n_reps, remainder) maximizing scanned coverage."""
+    blocks = cfg.blocks
+    best = (blocks[:1], 1, blocks[1:])
+    best_cov = 1
+    for ln in range(1, min(len(blocks), 8) + 1):
+        unit = blocks[:ln]
+        reps = 0
+        while blocks[reps * ln:(reps + 1) * ln] == unit:
+            reps += 1
+        cov = reps * ln
+        if cov > best_cov or (cov == best_cov and ln < len(best[0])):
+            best, best_cov = (unit, reps, blocks[reps * ln:]), cov
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(kind: str, cfg: ModelConfig, key):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"norm1": init_norm(cfg.norm, d)}
+    if kind in ("attn", "local_attn", "cross_attn"):
+        p["attn"] = A.init_attention(cfg, ks[0], cross=(kind == "cross_attn"))
+        if cfg.post_attn_norm:
+            p["norm_post"] = init_norm(cfg.norm, d)
+        p["norm2"] = init_norm(cfg.norm, d)
+        p["ffn"] = MOE.init_moe(cfg, ks[1]) if cfg.moe else M.init_mlp(cfg, ks[1])
+    elif kind == "rglru":
+        p["rglru"] = RG.init_rglru_block(cfg, ks[0])
+        p["norm2"] = init_norm(cfg.norm, d)
+        p["ffn"] = MOE.init_moe(cfg, ks[1]) if cfg.moe else M.init_mlp(cfg, ks[1])
+    elif kind == "rwkv":
+        p["time_mix"] = RW.init_rwkv_block(cfg, ks[0])
+        p["norm2"] = init_norm(cfg.norm, d)
+        p["channel_mix"] = RW.init_rwkv_channel_mix(cfg, ks[1])
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def apply_block(kind: str, p, cfg: ModelConfig, x, q_pos, state=None,
+                cache_index=None, image_embeds=None, train=False):
+    """Pre-norm residual block. Returns (x, new_state, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local_attn", "cross_attn"):
+        window = cfg.local_window if kind == "local_attn" else 0
+        y, new_inner = A.attention(
+            p["attn"], cfg, h, q_pos,
+            kv_src=image_embeds if kind == "cross_attn" else None,
+            cache=state, cache_index=cache_index,
+            window=window, ring=(kind == "local_attn" and state is not None),
+            train=train,
+        )
+        if cfg.post_attn_norm:
+            y = apply_norm(cfg.norm, p["norm_post"], y, cfg.norm_eps)
+        x = x + y
+        h2 = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+        if cfg.moe:
+            y2, aux = MOE.moe_ffn(p["ffn"], cfg, h2, train=train)
+        else:
+            y2 = M.mlp(p["ffn"], cfg, h2, train=train)
+        x = x + y2
+        return x, new_inner, aux
+    if kind == "rglru":
+        y, new_inner = RG.rglru_block(p["rglru"], cfg, h, state, train=train)
+        x = x + y
+        h2 = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+        if cfg.moe:
+            y2, aux = MOE.moe_ffn(p["ffn"], cfg, h2, train=train)
+        else:
+            y2 = M.mlp(p["ffn"], cfg, h2, train=train)
+        x = x + y2
+        return x, new_inner, aux
+    if kind == "rwkv":
+        y, new_inner = RW.rwkv_time_mix(p["time_mix"], cfg, h, state, train=train)
+        x = x + y
+        h2 = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+        y2, new_inner2 = RW.rwkv_channel_mix(p["channel_mix"], cfg, h2, new_inner, train=train)
+        x = x + y2
+        return x, new_inner2, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key) -> dict:
+    unit, reps, rest = layer_plan(cfg)
+    ks = jax.random.split(key, 4)
+    params: dict = {}
+    if cfg.embed_inputs:
+        params["embed"] = jax.random.normal(
+            ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * cfg.d_model**-0.5
+
+    def unit_params(k):
+        uks = jax.random.split(k, len(unit))
+        return [init_block(kind, cfg, uk) for kind, uk in zip(unit, uks)]
+
+    rep_keys = jax.random.split(ks[1], reps)
+    stacked = [unit_params(k) for k in rep_keys]
+    # list[rep][pos] -> list[pos] of stacked trees
+    params["scan"] = [
+        jax.tree.map(lambda *xs: jnp.stack(xs), *[s[i] for s in stacked])
+        for i in range(len(unit))
+    ]
+    rest_keys = jax.random.split(ks[2], max(len(rest), 1))
+    params["rest"] = [init_block(kind, cfg, k) for kind, k in zip(rest, rest_keys)]
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            ks[3], (cfg.d_model, cfg.vocab), jnp.float32) * cfg.d_model**-0.5
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """Parameter tree as ShapeDtypeStructs — no allocation (dry-run path).
+
+    ``dtype`` casts matrix params to the compute dtype (as ``cast_params``
+    would on real arrays)."""
+    def build(k):
+        p = init(cfg, k)
+        return cast_params(p, dtype) if dtype is not None else p
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(abstract_params(cfg)))
+
+
+def cast_params(params, dtype):
+    """Cast float params to the compute dtype (norm scales stay f32)."""
+    def _cast(x):
+        if x.dtype == jnp.float32 and x.ndim >= 2:
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_cast, params)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (None if cfg.remat == "full"
+              else jax.checkpoint_policies.save_only_these_names("decode_cache"))
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def _run_blocks(params, cfg: ModelConfig, x, q_pos, states=None, cache_index=None,
+                image_embeds=None, train=False):
+    """Apply the full block schedule.
+
+    ``states`` (decode/prefill): the stacked-state dict built by
+    ``cache.init_model_state`` — scan-position states already carry the
+    (n_reps,) axis, so the layer scan threads them through with zero
+    stack/unstack copies (they alias straight into the while-loop carry)."""
+    unit, reps, rest = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # -- scanned repetitions --
+    def unit_fn(x, per_rep):
+        p_list, s_list = per_rep
+        new_states, aux = [], jnp.zeros((), jnp.float32)
+        x = constrain_batch(x)  # keep the batch pinned to DP through the scan
+        for j, kind in enumerate(unit):
+            s = s_list[j] if s_list is not None else None
+            x, ns, a = apply_block(kind, p_list[j], cfg, x, q_pos, s,
+                                   cache_index, image_embeds, train)
+            new_states.append(ns)
+            aux += a
+        return x, (new_states, aux)
+
+    scan_states = states["scan"] if states is not None else None
+    body = _maybe_remat(unit_fn, cfg) if train else unit_fn
+    x, (new_scan_states, auxs) = jax.lax.scan(
+        body, x, (params["scan"], scan_states))
+    aux_total += auxs.sum()
+
+    # -- remainder layers (unrolled) --
+    new_rest_states = []
+    for i, kind in enumerate(rest):
+        s = states["rest"][i] if states is not None else None
+        x, ns, a = apply_block(kind, params["rest"][i], cfg, x, q_pos, s,
+                               cache_index, image_embeds, train)
+        new_rest_states.append(ns)
+        aux_total += a
+
+    new_states = None
+    if states is not None:
+        new_states = dict(states, scan=new_scan_states, rest=new_rest_states)
+    return x, new_states, aux_total
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens):
+    if cfg.embed_inputs:
+        x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    else:
+        x = tokens.astype(jnp.dtype(cfg.dtype))  # precomputed frame/patch embeds
+    return constrain_batch(x)
+
+
+def lm_head(params, cfg: ModelConfig, x):
+    w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = pim_linear(x, w, cfg=cfg.pim).astype(jnp.float32)
+    if cfg.logits_softcap:
+        logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+    return logits
+
+
+def forward(params, cfg: ModelConfig, tokens, image_embeds=None, train=False):
+    """Full-sequence forward. Returns (logits (B,S,V) f32, aux loss)."""
+    x = embed_inputs(params, cfg, tokens)
+    b, s = x.shape[:2]
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _, aux = _run_blocks(params, cfg, x, q_pos, image_embeds=image_embeds,
+                            train=train)
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    return lm_head(params, cfg, x), aux
+
+
+def _xent(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def loss_fn(params, cfg: ModelConfig, batch, train=True):
+    """Mean next-token cross entropy (+ MoE aux). batch: tokens/labels(+images).
+
+    ``cfg.loss_chunk > 0`` evaluates the head + xent in sequence chunks so
+    the (B, S, V) logits tensor never materializes (big-vocab memory fix).
+    """
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x = embed_inputs(params, cfg, tokens)
+    b, s = x.shape[:2]
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _, aux = _run_blocks(params, cfg, x, q_pos,
+                            image_embeds=batch.get("image_embeds"), train=train)
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+
+    if cfg.loss_chunk and s % cfg.loss_chunk == 0 and s > cfg.loss_chunk:
+        n_chunk = s // cfg.loss_chunk
+        xc = x.reshape(b, n_chunk, cfg.loss_chunk, -1).swapaxes(0, 1)
+        lc = labels.reshape(b, n_chunk, cfg.loss_chunk).swapaxes(0, 1)
+
+        def chunk_loss(carry, xl):
+            xi, li = xl
+            logits = lm_head(params, cfg, xi)
+            return carry + _xent(logits, li).sum(), None
+
+        total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xc, lc))
+        loss = total / (b * s)
+    else:
+        logits = lm_head(params, cfg, x)
+        loss = _xent(logits, labels).mean()
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, tokens, state, image_embeds=None):
+    """One decode step. tokens (B, 1) (or (B,1,d) embeds) -> (logits, state).
+
+    ``state["length"]`` is (B,): every slot of a continuous-batching grid
+    decodes against its own position/offset."""
+    x = embed_inputs(params, cfg, tokens)
+    b = x.shape[0]
+    idx = jnp.broadcast_to(state["length"], (b,)).astype(jnp.int32)
+    q_pos = idx[:, None]
+    x, new_state, _ = _run_blocks(params, cfg, x, q_pos, states=state,
+                                  cache_index=idx, image_embeds=image_embeds)
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head(params, cfg, x)
+    new_state["length"] = state["length"] + 1
+    return logits, new_state
+
+
+def prefill(params, cfg: ModelConfig, tokens, state, image_embeds=None):
+    """Run a whole prompt through the model, filling the decode state."""
+    x = embed_inputs(params, cfg, tokens)
+    b, s = x.shape[:2]
+    idx = jnp.broadcast_to(state["length"], (b,)).astype(jnp.int32)
+    q_pos = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+    x, new_state, _ = _run_blocks(params, cfg, x, q_pos, states=state,
+                                  cache_index=idx, image_embeds=image_embeds)
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head(params, cfg, x[:, -1:])
+    new_state["length"] = state["length"] + s
+    return logits, new_state
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Decode state; KV caches default to the model compute dtype."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    return C.init_model_state(cfg, batch, max_len, dtype=dtype)

@@ -1,0 +1,172 @@
+"""Mixture-of-experts FFN with sort-based token dispatch (grok/phi3.5-moe).
+
+Dispatch algorithm (the memory-sane one — no (T, E, C) one-hot tensors):
+
+  1. router logits -> top-k (expert_id, gate) per token
+  2. flatten the T*k assignments and sort them by expert id (stable, so
+     intra-expert order is token order)
+  3. rank-within-expert via a sorted-segment prefix sum; assignments with
+     rank >= capacity are *dropped* (standard capacity-factor semantics)
+  4. scatter surviving tokens into an (E, C, d) buffer, run the batched
+     per-expert gated FFN as one einsum pair, gather back through the
+     inverse permutation, combine with gate weights
+
+Under GSPMD the (E, C, d) buffer shards expert-wise on the "model" mesh
+axis (expert parallelism) when E divides the axis; otherwise the d_ff axis
+shards (tensor parallelism inside every expert — grok's 8 experts on a
+16-wide axis). ``repro.distributed.sharding`` applies those rules via
+``with_sharding_constraint``; this module is mesh-agnostic.
+
+Aux losses follow the standard load-balancing recipe (mean gate * mean
+assignment per expert) plus router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pim_layers import pim_linear
+
+from .config import ModelConfig
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def init_moe(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d**-0.5,
+        "w_in": jax.random.normal(ks[1], (e, d, f), jnp.float32) * d**-0.5,
+        "w_out": jax.random.normal(ks[2], (e, f, d), jnp.float32) * f**-0.5,
+    }
+    if cfg.act.endswith("gated"):
+        p["w_gate"] = jax.random.normal(ks[3], (e, d, f), jnp.float32) * d**-0.5
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    mc = cfg.moe
+    c = int(tokens * mc.top_k / mc.n_experts * mc.capacity_factor)
+    return max(c + (-c) % 8, 8)  # sublane-align
+
+
+def moe_ffn(p, cfg: ModelConfig, x: jax.Array, train: bool = False):
+    """x: (B, S, d) -> (out (B, S, d), aux-loss scalar).
+
+    Group-batched sort dispatch: tokens route within their data-parallel
+    shard group (own capacity — per-device capacity semantics of
+    large-scale MoE). Every dispatch-stage tensor carries an explicit
+    sharding constraint: the group dim pins to the DP axes and the expert
+    FFN hidden dim to the TP axis, so the only collectives left are the
+    FSDP weight all-gathers and the TP output all-reduce. (Unconstrained,
+    GSPMD contracted the expert einsums over FSDP-sharded d and all-reduced
+    multi-GB partial outputs — see EXPERIMENTS.md §Perf/grok.)"""
+    from repro.distributed import sharding as sh
+    from jax.sharding import PartitionSpec as P
+
+    mc = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k, e = mc.top_k, mc.n_experts
+    mesh = sh.get_mesh()
+    g = 1
+    dp = ()
+    tp_ok = False
+    if mesh is not None:
+        dp = sh.dp_axes(mesh)
+        dpn = sh.axis_size(mesh, *dp)
+        if dpn > 1 and b % dpn == 0:
+            g = dpn
+        tp_ok = cfg.d_ff % sh.axis_size(mesh, "model") == 0
+
+    tl = t // g
+    cap = _capacity(tl, cfg)
+    # Expert-parallel when E divides the TP axis (phi3.5: 16e/16) — expert
+    # dim shards, dispatch becomes the classic EP all-to-all. Otherwise TP
+    # inside each expert (grok: 8e/16) — hidden dim shards.
+    ep_ok = mesh is not None and e % max(sh.axis_size(mesh, "model"), 1) == 0 \
+        and sh.axis_size(mesh, "model") > 1
+
+    def cg(arr, *spec):  # constrain with group dim on DP axes
+        if mesh is None or g == 1:
+            return arr
+        return sh.constrain(arr, P(dp, *spec))
+
+    xg = cg(x.reshape(g, tl, d), None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (G, T_l, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- losses ----
+    me = probs.mean(1)                                       # (G, E)
+    one_hot = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)  # (G,T_l,k,E)
+    ce = one_hot.sum((1, 2)) / (tl * k)                      # (G, E)
+    aux = mc.aux_loss * e * jnp.sum(me * ce, -1).mean()
+    z = mc.router_z_loss * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- group-local sort dispatch ----
+    flat_expert = expert_ids.reshape(g, tl * k)
+    order = jnp.argsort(flat_expert, axis=-1, stable=True)
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=-1)
+    group_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(sorted_expert)
+    rank = (jnp.arange(tl * k)[None]
+            - jnp.take_along_axis(group_start, sorted_expert, axis=-1))
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_expert * cap + rank, e * cap)
+    src_token = order // k                                   # (G, T_l*k)
+
+    vals = jnp.take_along_axis(xg, src_token[..., None], axis=1)
+    gidx = jnp.arange(g)[:, None]
+    buf = jnp.zeros((g, e * cap + 1, d), x.dtype).at[gidx, slot].set(vals)
+    buf = buf[:, :-1].reshape(g, e, cap, d)
+
+    # ---- batched expert FFN ----
+    # TP-expert case (E doesn't divide the TP axis, e.g. grok 8e/16): pin
+    # buffers/weights so the hidden dim shards on TP and weights gather
+    # their FSDP axis — unconstrained, GSPMD partial-reduced the (much
+    # larger) activations over the data axis (§Perf/grok). EP case (E
+    # divides, e.g. phi 16e/16): the at-rest expert sharding propagates
+    # best UNconstrained — forcing the EP all-to-all through a dynamic
+    # scatter regressed 4x (measured; see §Perf).
+    act = _ACTS[cfg.act.split("_")[0]]
+    tp = ("model",) if (tp_ok and not ep_ok) else (None,)
+
+    def cw(wt, *spec):  # constrain an expert weight at use (TP case only)
+        if mesh is None or ep_ok:
+            return wt
+        return sh.constrain(wt, P(*spec))
+
+    def ca(arr, *spec):  # constrain an activation (TP case only)
+        if ep_ok:
+            return arr
+        return cg(arr, *spec)
+
+    buf = ca(buf, None, None, None)
+    w_in = cw(p["w_in"], None, None, *tp)
+    h = jnp.einsum("gecd,edf->gecf", buf, w_in.astype(x.dtype))
+    h = ca(h, None, None, *tp)
+    if "w_gate" in p:
+        w_gate = cw(p["w_gate"], None, None, *tp)
+        gt = jnp.einsum("gecd,edf->gecf", buf, w_gate.astype(x.dtype))
+        h = act(ca(gt, None, None, *tp)) * h
+    else:
+        h = act(h)
+    w_out = cw(p["w_out"], None, *tp, None)
+    yb = jnp.einsum("gecf,efd->gecd", h, w_out.astype(x.dtype))
+    yb = ca(yb, None, None, None)
+
+    # ---- combine ----
+    ybf = yb.reshape(g, e * cap, d)
+    safe_slot = jnp.minimum(slot, e * cap - 1)
+    y_sorted = jnp.take_along_axis(ybf, safe_slot[..., None], axis=1)
+    y_sorted = jnp.where(keep[..., None], y_sorted, 0.0)
+    w_sorted = jnp.take_along_axis(
+        gate_vals.reshape(g, tl * k), order, axis=-1)[..., None].astype(x.dtype)
+    out = jnp.zeros((g, tl, d), x.dtype).at[gidx, src_token].add(
+        y_sorted * w_sorted)
+    out = cg(out, None, None)
+    return out.reshape(b, s, d), aux + z

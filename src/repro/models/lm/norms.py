@@ -1,0 +1,50 @@
+"""Normalization layers (RMSNorm / LayerNorm / QK-norm), pure functions.
+
+Params are plain dicts; compute in f32 then cast back — the standard
+numerics discipline for bf16 training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def layernorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def init_norm(kind: str, d: int):
+    return init_layernorm(d) if kind == "layernorm" else init_rmsnorm(d)
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-6):
+    return layernorm(p, x, eps) if kind == "layernorm" else rmsnorm(p, x, eps)
+
+
+def qk_head_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm over head_dim (qwen3-style qk_norm).
+
+    ``x``: (..., heads, head_dim); ``scale``: (head_dim,).
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)

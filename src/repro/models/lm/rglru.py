@@ -1,0 +1,112 @@
+"""Real-Gated Linear Recurrent Unit block (RecurrentGemma / Griffin,
+arXiv:2402.19427) — the "recurrent" third of the hybrid's 1:2 pattern.
+
+Recurrence (per channel, f32):
+
+    r_t = sigmoid(W_a x_t + b_a)              recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)              input gate
+    a_t = exp(c * r_t * log_sigmoid(Lambda))  data-dependent decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill evaluates the whole sequence with ``jax.lax.associative_scan`` over
+the affine maps (a_t, b_t) — O(S log S) depth, fully parallel across
+(batch, channel) — and decode is the O(1) single-step update, which is what
+makes the 500k-token shape runnable for this family. The block wraps the
+recurrence with a width-4 causal depthwise conv and a GeLU gate branch
+(Griffin's recurrent block), then projects back to d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pim_layers import pim_linear
+
+from .config import ModelConfig
+
+_C = 8.0
+
+
+def init_rglru_block(cfg: ModelConfig, key):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a ~ uniform(0.9, 0.999) at r = 1 (Griffin appendix).
+    u = jax.random.uniform(ks[4], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1 of -log(a)/c
+    return {
+        "w_x": jax.random.normal(ks[0], (d, w), jnp.float32) * d**-0.5,
+        "w_gate": jax.random.normal(ks[1], (d, w), jnp.float32) * d**-0.5,
+        "conv": jax.random.normal(ks[5], (cfg.conv1d_width, w), jnp.float32) * 0.1,
+        "w_a": jax.random.normal(ks[2], (w, w), jnp.float32) * w**-0.5,
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": jax.random.normal(ks[3], (w, w), jnp.float32) * w**-0.5,
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "w_out": jax.random.normal(jax.random.fold_in(key, 9), (w, d), jnp.float32) * w**-0.5,
+    }
+
+
+def _causal_conv(p_conv, x, state):
+    """Depthwise causal conv, width K. x (B,S,W); state (B,K-1,W) | None."""
+    kw = p_conv.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, W)
+    y = sum(xp[:, i : i + x.shape[1]] * p_conv[i].astype(x.dtype) for i in range(kw))
+    new_state = xp[:, -(kw - 1):] if kw > 1 else None
+    return y, new_state
+
+
+def _gates(p, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"] + p["b_i"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])          # (B, S, W) or (B, W)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None):
+    """Full-sequence recurrence via associative scan. x (B,S,W) -> (y, h_last)."""
+    a, b = _gates(p, x)
+    if h0 is not None:
+        # Fold the carried state into the first step's offset.
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x: jax.Array, h_prev: jax.Array):
+    """One decode step. x (B,W), h_prev (B,W) f32 -> (y, h)."""
+    a, b = _gates(p, x)
+    h = a * h_prev + b
+    return h.astype(x.dtype), h
+
+
+def rglru_block(p, cfg: ModelConfig, x: jax.Array, state: dict | None = None,
+                train: bool = False):
+    """Griffin recurrent block. x (B,S,d) -> (out (B,S,d), new_state|None)."""
+    gate = jax.nn.gelu(pim_linear(x, p["w_gate"], cfg=cfg.pim, train=train))
+    h_in = pim_linear(x, p["w_x"], cfg=cfg.pim, train=train)
+    conv_state = state["conv"] if state is not None else None
+    h_in, new_conv = _causal_conv(p["conv"], h_in, conv_state)
+    if state is not None and x.shape[1] == 1:
+        y, h_last = rglru_step(p, h_in[:, 0], state["h"])
+        y = y[:, None]
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_last = rglru_scan(p, h_in, h0)
+    out = pim_linear(y * gate, p["w_out"], cfg=cfg.pim, train=train,
+                     role="tp_in")
+    new_state = {"conv": new_conv, "h": h_last} if state is not None else None
+    return out, new_state

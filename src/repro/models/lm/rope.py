@@ -1,0 +1,29 @@
+"""Rotary position embeddings, decode-aware.
+
+``apply_rope(x, positions, theta)`` works for both full-sequence prefill
+(positions = arange) and single-token decode (positions = cache length), so
+train_step and serve_step share one code path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (B, S) int32 -> (sin, cos) of shape (B, S, head_dim/2) f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (B, S, half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, H, D) -> rotated, same shape/dtype. Rotation in f32."""
+    b, s, h, d = x.shape
+    sin, cos = rope_angles(positions, d, theta)
+    sin = sin[:, :, None, :]  # (B, S, 1, D/2)
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

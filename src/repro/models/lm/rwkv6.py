@@ -1,0 +1,202 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free, data-dependent
+decay linear recurrence.
+
+Time-mix per head (head_dim D, state S in f32, key-major layout):
+
+    y_t = r_t @ (S_{t-1} + (u * k_t) v_t^T)          readout
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T              state update
+
+with the Finch novelty: the per-channel decay is data-dependent,
+``w_t = exp(-exp(w0 + tanh(x_w @ A) @ B))``, and token-shift interpolation
+``lerp(x_t, x_{t-1}, mu)`` feeds each projection. The channel-mix half is
+the squared-ReLU gated FFN of the RWKV line.
+
+Prefill runs a chunked ``jax.lax.scan`` (sequential over time but fully
+parallel over batch x heads x channels — the dominant cost is the rank-1
+state update, S-independent per step); decode is the O(1) step. The state
+is (H, D, D) per sequence — constant in sequence length, which is what
+qualifies this family for the 500k decode shape.
+
+A chunkwise-parallel Pallas kernel for the prefill scan is a perf-phase
+candidate (see EXPERIMENTS.md §Perf); the scan here is the reference
+semantics the kernel must reproduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pim_layers import pim_linear
+
+from .config import ModelConfig
+
+_LORA = 64  # decay-LoRA rank (Finch uses 64 for ~3B models)
+
+
+def init_rwkv_block(cfg: ModelConfig, key):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    heads = d // hd
+    ks = jax.random.split(key, 8)
+    s = d**-0.5
+    # Decay base: initialized so channels span slow..fast decay (RWKV init).
+    ratio = jnp.arange(d, dtype=jnp.float32) / max(d - 1, 1)
+    w0 = -6.0 + 5.0 * ratio**0.9
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # token-shift for r,k,v,g,w
+        "w_r": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "w_k": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "w_v": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "w_g": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "w_o": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        "decay_a": jax.random.normal(ks[5], (d, _LORA), jnp.float32) * s,
+        "decay_b": jax.random.normal(ks[6], (_LORA, d), jnp.float32) * _LORA**-0.5,
+        "w0": w0,
+        "u": jnp.zeros((heads, hd), jnp.float32),   # bonus for current token
+        "ln_scale": jnp.ones((heads, hd), jnp.float32),  # per-head groupnorm
+    }
+
+
+def init_rwkv_channel_mix(cfg: ModelConfig, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), jnp.float32),  # token-shift for k, r
+        "w_k": jax.random.normal(ks[0], (d, f), jnp.float32) * d**-0.5,
+        "w_v": jax.random.normal(ks[1], (f, d), jnp.float32) * f**-0.5,
+        "w_r": jax.random.normal(ks[2], (d, d), jnp.float32) * d**-0.5,
+    }
+
+
+_LOG_W_MIN = -5.0  # decay clamp: keeps exp(-P) < e^80 within a 16-chunk
+
+
+def _chunked_wkv(r, k, v, w, u, S0, L: int):
+    """Chunked-parallel WKV: matmul form within chunks, O(S/L) state updates.
+
+    The sequential scan touches the (B,H,D,D) state every token — HBM
+    traffic ~ S x D^2. Rewriting over chunks of L tokens turns the
+    intra-chunk part into three (L x D)-matmuls per head (MXU work) and
+    updates the state once per chunk (traffic / L). Exactness: with
+    P[t] = cumsum(log w), every decay product becomes exp(P_i - P_j); the
+    log-decay clamp at -5 bounds exp magnitudes inside f32 for L = 16
+    (channels decaying faster than e^-5/step forget within a token anyway).
+
+    r,k,v (B,S,H,D) f32; w (B,S,H,D) in (0,1); S0 (B,H,D,D). Returns
+    (y (B,S,H,D), S_final).
+    """
+    bsz, s, h, d = r.shape
+    n = s // L
+
+    def to_chunks(t):  # (B,S,H,D) -> (n, B, H, L, D)
+        return t.reshape(bsz, n, L, h, d).transpose(1, 0, 3, 2, 4)
+
+    lw = jnp.maximum(jnp.log(jnp.clip(w, 1e-38)), _LOG_W_MIN)
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)          # strict: s < t
+    u_b = u[None, :, None, :]                              # (1, H, 1, D)
+
+    def chunk_step(S, xs):
+        rj, kj, vj, lwj = xs                               # (B,H,L,D)
+        P = jnp.cumsum(lwj, axis=2)                        # inclusive
+        p_prev = P - lwj                                   # P[t-1]
+        r_t = rj * jnp.exp(p_prev)                         # <= |r|
+        k_t = kj * jnp.exp(-P)                             # <= |k| e^{5L}
+        A = jnp.einsum("bhtd,bhsd->bhts", r_t, k_t)
+        A = jnp.where(mask, A, 0.0)
+        y = jnp.einsum("bhtd,bhdv->bhtv", r_t, S)          # carry-in term
+        y += jnp.einsum("bhts,bhsv->bhtv", A, vj)          # intra-chunk
+        y += jnp.sum(rj * u_b * kj, -1, keepdims=True) * vj  # u-bonus diag
+        decay_all = jnp.exp(P[:, :, -1:, :])               # Π_chunk w
+        k_rem = kj * jnp.exp(P[:, :, -1:, :] - P)          # exp(P_L - P_s)
+        S = (decay_all[:, :, 0, :, None] * S
+             + jnp.einsum("bhsd,bhsv->bhdv", k_rem, vj))
+        return S, y
+
+    S_last, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, lwc))
+    # (n, B, H, L, D) -> (B, S, H, D)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(bsz, s, h, d)
+    return y, S_last
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None):
+    """x (B,S,d) -> x_{t-1} (B,S,d); ``prev`` (B,d) carries across calls."""
+    first = prev[:, None].astype(x.dtype) if prev is not None else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _heads(x, heads, hd):
+    return x.reshape(*x.shape[:-1], heads, hd)
+
+
+def _group_norm(x, scale, eps):
+    """Per-head RMS-style groupnorm over head_dim; x (..., H, D) f32."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rwkv_time_mix(p, cfg: ModelConfig, x: jax.Array, state: dict | None = None,
+                  train: bool = False):
+    """x (B,S,d) -> (y (B,S,d), new_state). f32 recurrence, scan over S."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    heads = d // hd
+    prev_tok = state["tm_shift"] if state is not None else None
+    xp = _token_shift(x, prev_tok)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + (xp - x) * mu[i] for i in range(5))
+
+    r = _heads(pim_linear(xr, p["w_r"], cfg=cfg.pim, train=train), heads, hd)
+    k = _heads(pim_linear(xk, p["w_k"], cfg=cfg.pim, train=train), heads, hd)
+    v = _heads(pim_linear(xv, p["w_v"], cfg=cfg.pim, train=train), heads, hd)
+    g = jax.nn.silu(pim_linear(xg, p["w_g"], cfg=cfg.pim, train=train))
+    # Data-dependent per-channel decay (the Finch contribution). Log-decay
+    # clamped at -5/step (see _chunked_wkv) in both execution paths so the
+    # chunked rewrite is exact w.r.t. the sequential scan.
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(jnp.maximum(-jnp.exp(p["w0"] + dd), _LOG_W_MIN))
+    w = _heads(w, heads, hd)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u"]
+
+    S0 = state["wkv"] if state is not None else jnp.zeros((b, heads, hd, hd), jnp.float32)
+    chunk = cfg.rwkv_chunk
+    if chunk and s % chunk == 0 and s > 1:
+        y, S_last = _chunked_wkv(r32, k32, v32, w, u, S0, chunk)
+    else:
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp                      # (B,H,D) each
+            kv = k_t[..., :, None] * v_t[..., None, :]    # (B,H,D,D) rank-1
+            y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., :, None] * kv)
+            S = w_t[..., :, None] * S + kv
+            return S, y
+
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r32, k32, v32, w))
+        S_last, ys = jax.lax.scan(step, S0, xs)
+        y = jnp.moveaxis(ys, 0, 1)                        # (B,S,H,D)
+
+    y = _group_norm(y, p["ln_scale"], cfg.norm_eps) * g.astype(jnp.float32).reshape(
+        b, s, heads, hd)
+    out = pim_linear(y.reshape(b, s, d).astype(x.dtype), p["w_o"], cfg=cfg.pim,
+                     train=train, role="tp_in")
+    new_state = None
+    if state is not None:
+        new_state = dict(state, tm_shift=x[:, -1].astype(jnp.float32), wkv=S_last)
+    return out, new_state
+
+
+def rwkv_channel_mix(p, cfg: ModelConfig, x: jax.Array, state: dict | None = None,
+                     train: bool = False):
+    prev_tok = state["cm_shift"] if state is not None else None
+    xp = _token_shift(x, prev_tok)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xp - x) * mu[0]
+    xr = x + (xp - x) * mu[1]
+    k = pim_linear(xk, p["w_k"], cfg=cfg.pim, train=train)
+    k = jnp.square(jax.nn.relu(k))
+    v = pim_linear(k, p["w_v"], cfg=cfg.pim, train=train, role="tp_in")
+    r = jax.nn.sigmoid(pim_linear(xr, p["w_r"], cfg=cfg.pim, train=train))
+    out = r * v
+    new_state = dict(state, cm_shift=x[:, -1].astype(jnp.float32)) if state is not None else None
+    return out, new_state

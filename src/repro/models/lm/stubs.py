@@ -1,0 +1,30 @@
+"""Modality-frontend stubs for the [vlm]/[audio] backbones.
+
+Per the assignment, the transformer BACKBONE is the deliverable; the
+frontend is a stub that supplies precomputed patch/frame embeddings with
+the right shapes and deterministic content. ``input_specs()`` in
+:mod:`repro.launch.dryrun` references these shapes; examples/tests call the
+generators for real arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def image_patch_embeddings(cfg: ModelConfig, batch: int, key=None, dtype=jnp.bfloat16):
+    """Stub ViT output: (B, n_image_tokens, d_model)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shape = (batch, cfg.n_image_tokens, cfg.d_model)
+    return (jax.random.normal(key, shape, jnp.float32) * cfg.d_model**-0.5).astype(dtype)
+
+
+def audio_frame_embeddings(cfg: ModelConfig, batch: int, seq: int, key=None,
+                           dtype=jnp.bfloat16):
+    """Stub EnCodec frame embeddings: (B, S, d_model) — musicgen's decoder
+    input after the codebook-sum embedding stage."""
+    key = key if key is not None else jax.random.PRNGKey(1)
+    shape = (batch, seq, cfg.d_model)
+    return (jax.random.normal(key, shape, jnp.float32) * cfg.d_model**-0.5).astype(dtype)

@@ -1,0 +1,23 @@
+"""Device -> architecture evaluation substrate (paper §5).
+
+  device.py      NAND-SPIN + peripheral circuit constants (§5.1)
+  hierarchy.py   subarray/mat/bank organization (§5.2)
+  mapper.py      layer -> micro-operation counts (the §4 mapping scheme)
+  cost_model.py  op pricing in seconds/joules
+  calibrate.py   per-phase schedule-efficiency fit at the published endpoint
+  simulator.py   end-to-end CNN inference latency/energy/FPS
+  baselines.py   DRISA / PRIME / STT-CiM / MRIMA / IMCE analytical models
+  area.py        die area + add-on breakdown (Table 3, Fig. 17)
+"""
+from .area import add_on_area_mm2, chip_area_mm2
+from .calibrate import PAPER_CLAIMS, Calibration, calibrated
+from .cost_model import Cost, CostModel
+from .device import NandSpinDevice, PeripheralCircuits
+from .hierarchy import Geometry
+from .simulator import SimResult, peak_gops, simulate, simulate_model
+
+__all__ = [
+    "add_on_area_mm2", "chip_area_mm2", "PAPER_CLAIMS", "Calibration",
+    "calibrated", "Cost", "CostModel", "NandSpinDevice", "PeripheralCircuits",
+    "Geometry", "SimResult", "peak_gops", "simulate", "simulate_model",
+]

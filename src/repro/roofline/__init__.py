@@ -1,0 +1,3 @@
+from . import analysis, hw
+
+__all__ = ["analysis", "hw"]

@@ -1,0 +1,201 @@
+"""Roofline terms from a compiled (dry-run) executable.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective bytes on the wire / link_bw  (per chip)
+
+``cost_analysis()`` supplies FLOPs and bytes. Collective bytes are NOT in
+cost_analysis — we parse the post-partitioning HLO (``compiled.as_text()``,
+whose shapes are already per-shard) and sum the bytes each collective moves
+per chip, with ring-algorithm factors:
+
+  all-reduce      2 x bytes x (n-1)/n     (reduce-scatter + all-gather)
+  all-gather      result_bytes x (n-1)/n
+  reduce-scatter  operand_bytes x (n-1)/n
+  all-to-all      bytes x (n-1)/n
+  collective-permute  bytes
+
+where n is the size of the replica group the op runs over (parsed from
+``replica_groups``; n=1 groups contribute nothing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# op name at the assignment site, e.g. "%ag = bf16[..] all-gather(..)"
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ND_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128,256]' or tuple '(f32[4], f32[4])' -> total bytes."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ND_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _SRC_TGT_RE.search(line)
+    if m:  # collective-permute: each chip sends once
+        return 2
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    wire_bytes: float        # per-chip bytes on the wire (ring factors applied)
+    op_counts: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_kind: dict = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict = {k: 0 for k in _COLLECTIVES}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":   # bytes counted at the -start site
+            continue
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        b = shape_bytes(shape_str)
+        counts[kind] += 1
+        by_kind[kind] += b
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            wire += 2 * b * ring
+        elif kind == "collective-permute":
+            wire += b
+        else:
+            wire += b * ring
+    return CollectiveStats(bytes_by_kind=by_kind, wire_bytes=wire, op_counts=counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    chips: int
+    model_flops: float = 0.0   # 6*N*D (or 6*N_active*D) useful FLOPs, global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_chip / hw.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Step-time lower bound = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global) — catches remat/redundancy waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute roofline fraction at the bound: what MFU would be
+        if the step ran exactly at the dominant term."""
+        if not self.model_flops or not self.t_bound:
+            return 0.0
+        per_chip_useful = self.model_flops / self.chips
+        return (per_chip_useful / hw.PEAK_FLOPS_BF16) / self.t_bound
+
+    def report(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def train_model_flops(n_params: int, n_tokens: int) -> float:
+    """6*N*D for a train step (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_params * n_tokens
+
+
+def decode_model_flops(n_params: int, n_tokens: int) -> float:
+    """2*N per generated token (no backward)."""
+    return 2.0 * n_params * n_tokens
+
+
+def from_compiled(compiled, chips: int, model_flops: float) -> Roofline:
+    """Roofline terms from the compiled SPMD module (per-shard shapes).
+
+    Primary source: the trip-count-aware HLO walker in
+    :mod:`repro.roofline.hlo_cost` — XLA's own ``cost_analysis()`` counts
+    scan bodies once, which undercounts deep models by ~n_layers x.
+    """
+    from . import hlo_cost
+
+    cost = hlo_cost.analyze(compiled.as_text())
+    return Roofline(
+        flops_per_chip=cost.flops,
+        hbm_bytes_per_chip=cost.bytes,
+        wire_bytes_per_chip=cost.wire_bytes,
+        chips=chips,
+        model_flops=model_flops,
+    )

@@ -1,0 +1,124 @@
+"""Per-op-kind cost breakdown over an HLO module — the dry-run 'profiler'.
+
+With no hardware to trace, the optimization loop's profile is: which
+opcodes (weighted by loop trip counts) account for the bytes/flops. Used by
+the §Perf iterations to decide what to attack next.
+"""
+from __future__ import annotations
+
+import collections
+
+from . import hlo_cost
+
+
+class BreakdownModel(hlo_cost.CostModel):
+    def __init__(self, text: str):
+        super().__init__(text)
+        self.by_op_bytes: dict = collections.Counter()
+        self.by_op_flops: dict = collections.Counter()
+
+    def evaluate_with_breakdown(self):
+        total = self._comp_cost_bd(self.entry, 1.0)
+        return total, dict(self.by_op_bytes), dict(self.by_op_flops)
+
+    def _comp_cost_bd(self, name: str, mult: float) -> hlo_cost.Cost:
+        total = hlo_cost.Cost()
+        shapes = {i.name: i.shape for i in self.comps.get(name, [])}
+        for inst in self.comps.get(name, []):
+            op = inst.opcode
+            if op == "while":
+                trips = 1
+                mt = hlo_cost._TRIP.search(inst.rest)
+                if mt:
+                    trips = int(mt.group(1))
+                mb = hlo_cost._BODY.search(inst.rest)
+                if mb:
+                    total.add(self._comp_cost_bd(mb.group(1), mult * trips), trips)
+                continue
+            if op == "call":
+                m = hlo_cost._CALLS.search(inst.rest)
+                if m:
+                    total.add(self._comp_cost_bd(m.group(1), mult))
+                continue
+            c = self._inst_cost(inst, shapes, True)
+            total.add(c)
+            key = op if op != "fusion" else "fusion"
+            self.by_op_bytes[key] += c.bytes * mult
+            self.by_op_flops[key] += c.flops * mult
+        return total
+
+
+def breakdown(text: str, top: int = 12):
+    m = BreakdownModel(text)
+    total, by_bytes, by_flops = m.evaluate_with_breakdown()
+    rows = []
+    for op, b in sorted(by_bytes.items(), key=lambda kv: -kv[1])[:top]:
+        rows.append({"op": op, "GB": round(b / 1e9, 1),
+                     "bytes_frac": round(b / max(total.bytes, 1), 3),
+                     "GFLOP": round(by_flops.get(op, 0) / 1e9, 1)})
+    return total, rows
+
+
+def attribute(text: str, metric: str = "wire", top: int = 16):
+    """Attribute a cost metric ('wire' | 'bytes' | 'flops') to
+    (opcode, jax op_name) sites, with loop-trip multiplication."""
+    import re
+
+    cm = hlo_cost.CostModel(text)
+    meta_re = re.compile(r'op_name="([^"]*)"')
+    agg: dict = collections.Counter()
+    cnt: dict = collections.Counter()
+
+    def walk(comp, mult):
+        shapes = {i.name: i.shape for i in cm.comps.get(comp, [])}
+        for inst in cm.comps.get(comp, []):
+            op = inst.opcode
+            if op == "while":
+                mt = hlo_cost._TRIP.search(inst.rest)
+                trips = int(mt.group(1)) if mt else 1
+                mb = hlo_cost._BODY.search(inst.rest)
+                if mb:
+                    walk(mb.group(1), mult * trips)
+                continue
+            if op == "call":
+                m = hlo_cost._CALLS.search(inst.rest)
+                if m:
+                    walk(m.group(1), mult)
+                continue
+            c = cm._inst_cost(inst, shapes, True)
+            val = {"wire": c.wire_bytes, "bytes": c.bytes, "flops": c.flops}[metric]
+            if val:
+                m = meta_re.search(inst.rest)
+                parts = [p for p in (m.group(1) if m else "?").split("/") if p]
+                key = (op.split("-start")[0], "/".join(parts[-2:])[:70])
+                agg[key] += val * mult
+                cnt[key] += mult
+
+    walk(cm.entry, 1.0)
+    rows = []
+    for (op, name), v in agg.most_common(top):
+        rows.append({"value_T": round(v / 1e12, 3), "n": int(cnt[(op, name)]),
+                     "op": op, "site": name})
+    return rows
+
+
+def _main():
+    import argparse
+    import gzip
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo", help="path to .hlo.txt[.gz]")
+    ap.add_argument("--metric", choices=("wire", "bytes", "flops"),
+                    default="wire")
+    ap.add_argument("--top", type=int, default=16)
+    args = ap.parse_args()
+    opener = gzip.open if args.hlo.endswith(".gz") else open
+    with opener(args.hlo, "rt") as f:
+        text = f.read()
+    for r in attribute(text, args.metric, args.top):
+        print(f"{r['value_T']:9.3f} T{args.metric[0].upper()}  n={r['n']:6d}  "
+              f"{r['op']:20s} {r['site']}")
+
+
+if __name__ == "__main__":
+    _main()

@@ -1,0 +1,393 @@
+"""Text-based HLO cost model with while-loop trip-count multiplication.
+
+``compiled.cost_analysis()`` visits each while-loop body ONCE, so any cost
+inside ``jax.lax.scan`` (layer stacks, grad-accumulation microbatches,
+chunked losses) is undercounted by the trip count — for a 64-layer scanned
+model that is a 64x error in every roofline term. This walker parses
+``compiled.as_text()`` (post-optimization, post-SPMD, so shapes are
+per-shard) and evaluates:
+
+  flops        2 * prod(result) * prod(contracting dims) per dot;
+               elementwise/reduce counted at one flop per output element
+  hbm bytes    per top-level op: operand + result bytes (fusion internals
+               excluded — a fusion reads its params and writes its root,
+               which is exactly XLA's fusion memory semantics)
+  collectives  bytes per kind, with ring factors and replica-group sizes
+               (see repro.roofline.analysis), multiplied through loops
+
+While bodies multiply by ``known_trip_count`` from backend_config (XLA
+always annotates scan-derived loops; unknown loops count once and are
+reported in ``unknown_loops``). ``conditional`` takes the max over
+branches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \(.*\)\s*->.*\{\s*$")
+_INST_PREFIX = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"^([\w\-]+)\((.*)$")
+
+
+def _parse_inst_line(line: str):
+    """'  %n = <shape> <op>(<rest>' -> (name, shape, opcode, rest) | None.
+
+    Tuple result shapes may contain '/*index=k*/' comments and nested
+    parens, so the shape is split off by paren balancing, not regex.
+    """
+    m = _INST_PREFIX.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    if rest.startswith("("):           # tuple shape: find matching paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rest[: i + 1]
+                    tail = rest[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:                              # plain shape token
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, tail = rest[:sp], rest[sp + 1:].lstrip()
+    mo = _OPCODE.match(tail)
+    if not mo:
+        return None
+    return name, shape, mo.group(1), mo.group(2)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'known_trip_count\D*?(\d+)')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_ND = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SRC_TGT = re.compile(r"source_target_pairs=")
+_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+# Ops that move no data of their own.
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "iota", "partition-id", "replica-id", "domain",
+         "opt-barrier"}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple:
+    elems = 0
+    total = 0
+    for dtype, dims in _SHAPE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+def _dims_of(shape_str: str) -> list:
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVE_KINDS})
+    unknown_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for k in COLLECTIVE_KINDS:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_counts[k] += int(other.coll_counts[k] * mult)
+        self.unknown_loops += other.unknown_loops
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+    def operand_names(self) -> list:
+        # operands come first in `rest`, up to the closing paren at depth 0
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    head = self.rest[:i]
+                    return re.findall(r"%([\w.\-]+)", head)
+        return re.findall(r"%([\w.\-]+)", self.rest)
+
+
+def parse_module(text: str) -> dict:
+    comps: dict = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        parsed = _parse_inst_line(line)
+        if parsed:
+            comps[cur].append(Instruction(*parsed))
+    return {"computations": comps, "entry": entry}
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_ND.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS.search(rest)
+    if m:
+        return m.group(1).count(",") + 1
+    if _SRC_TGT.search(rest):
+        return 2
+    return 1
+
+
+class CostModel:
+    def __init__(self, text: str):
+        mod = parse_module(text)
+        self.comps = mod["computations"]
+        self.entry = mod["entry"]
+        self._memo: dict = {}
+
+    def evaluate(self) -> Cost:
+        return self._comp_cost(self.entry, top_level=True)
+
+    # -- internals ----------------------------------------------------------
+
+    def _comp_cost(self, name: str, top_level: bool) -> Cost:
+        key = (name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        shapes = {i.name: i.shape for i in self.comps.get(name, [])}
+        for inst in self.comps.get(name, []):
+            total.add(self._inst_cost(inst, shapes, top_level))
+        self._memo[key] = total
+        return total
+
+    def _flops_only(self, name: str) -> float:
+        """Flops of a fusion body (bytes are the fusion's own I/O)."""
+        total = 0.0
+        shapes = {i.name: i.shape for i in self.comps.get(name, [])}
+        for inst in self.comps.get(name, []):
+            if inst.opcode == "fusion":
+                m = _CALLS.search(inst.rest)
+                if m:
+                    total += self._flops_only(m.group(1))
+            else:
+                total += self._op_flops(inst, shapes)
+        return total
+
+    def _op_flops(self, inst: Instruction, shapes: dict) -> float:
+        op = inst.opcode
+        out_elems, _ = _shape_elems_bytes(inst.shape)
+        if op == "dot":
+            cd = _CDIMS.search(inst.rest)
+            contract = 1
+            ops = inst.operand_names()
+            if cd and ops and ops[0] in shapes:
+                lhs_dims = _dims_of(shapes[ops[0]])
+                for d in cd.group(1).split(","):
+                    if d and int(d) < len(lhs_dims):
+                        contract *= lhs_dims[int(d)]
+            return 2.0 * out_elems * contract
+        if op == "convolution":
+            # flops ~ 2 * out_elems * (kernel elems / out-channels)
+            ops = inst.operand_names()
+            if len(ops) >= 2 and ops[1] in shapes:
+                kdims = _dims_of(shapes[ops[1]])
+                if kdims:
+                    return 2.0 * out_elems * max(1, math.prod(kdims) // max(kdims[-1], 1))
+            return 2.0 * out_elems
+        if op in ("reduce", "reduce-window"):
+            ops = inst.operand_names()
+            in_elems = 0
+            if ops and ops[0] in shapes:
+                in_elems, _ = _shape_elems_bytes(shapes[ops[0]])
+            return float(max(in_elems, out_elems))
+        if op in _FREE or op in ("copy", "reshape", "transpose", "broadcast",
+                                 "dynamic-slice", "dynamic-update-slice",
+                                 "slice", "concatenate", "gather", "scatter",
+                                 "pad", "reverse", "while", "conditional",
+                                 "call", "custom-call", "rng", "sort") or \
+           op in COLLECTIVE_KINDS or op.endswith("-start") or op.endswith("-done"):
+            return 0.0
+        # default: one flop per output element (elementwise / compare / select)
+        return float(out_elems)
+
+    def _inst_cost(self, inst: Instruction, shapes: dict, top_level: bool) -> Cost:
+        c = Cost()
+        op = inst.opcode
+        base_kind = op[:-6] if op.endswith("-start") else op
+
+        if op == "fusion":
+            m = _CALLS.search(inst.rest)
+            if m:
+                c.flops += self._flops_only(m.group(1))
+                c.bytes += self._fusion_bytes(inst, shapes, m.group(1))
+            else:
+                c.bytes += self._io_bytes(inst, shapes)
+            return c
+        if op == "while":
+            trips = 1
+            mt = _TRIP.search(inst.rest)
+            if mt:
+                trips = int(mt.group(1))
+            else:
+                c.unknown_loops += 1
+            mb = _BODY.search(inst.rest)
+            mc = _COND.search(inst.rest)
+            if mb:
+                c.add(self._comp_cost(mb.group(1), top_level=True), trips)
+            if mc:
+                c.add(self._comp_cost(mc.group(1), top_level=True), trips)
+            return c
+        if op == "conditional":
+            mb = _BRANCHES.search(inst.rest)
+            if mb:
+                branches = re.findall(r"%?([\w.\-]+)", mb.group(1))
+                costs = [self._comp_cost(b, top_level=True) for b in branches]
+                if costs:
+                    best = max(costs, key=lambda x: x.flops + x.bytes)
+                    c.add(best)
+            return c
+        if op == "call":
+            m = _CALLS.search(inst.rest) or re.search(r"to_apply=%?([\w.\-]+)",
+                                                      inst.rest)
+            if m:
+                c.add(self._comp_cost(m.group(1), top_level=True))
+            return c
+        if base_kind in COLLECTIVE_KINDS:
+            if op.endswith("-done"):
+                return c
+            n = _group_size(inst.rest)
+            b = self._io_bytes(inst, shapes, result_only_max=True)
+            c.bytes += self._io_bytes(inst, shapes)
+            if n > 1:
+                ring = (n - 1) / n
+                c.coll_counts[base_kind] += 1
+                c.coll_bytes[base_kind] += b
+                if base_kind == "all-reduce":
+                    c.wire_bytes += 2 * b * ring
+                elif base_kind == "collective-permute":
+                    c.wire_bytes += b
+                else:
+                    c.wire_bytes += b * ring
+            return c
+        if op in _FREE:
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            # In-place semantics (XLA HloCostAnalysis counts the update
+            # slice, not the whole buffer): read+write the update only.
+            ops_ = inst.operand_names()
+            upd = ops_[1] if len(ops_) > 1 else None
+            _, ub = _shape_elems_bytes(shapes.get(upd, "")) if upd else (0, 0)
+            c.bytes += 2.0 * ub
+            return c
+        if op in ("dynamic-slice", "gather", "slice"):
+            # Reads only the addressed window, writes the result.
+            _, rb = _shape_elems_bytes(inst.shape)
+            c.bytes += 2.0 * rb
+            return c
+        # plain top-level op
+        c.flops += self._op_flops(inst, shapes)
+        c.bytes += self._io_bytes(inst, shapes)
+        return c
+
+    def _fusion_bytes(self, inst: Instruction, shapes: dict, called: str) -> float:
+        """Fusion I/O with in-place DUS-root correction.
+
+        A loop fusion whose root is dynamic-update-slice updates its big
+        operand in place: traffic is the update slice (+ the other fusion
+        inputs), not 2x the whole carried buffer."""
+        total = self._io_bytes(inst, shapes)
+        body = self.comps.get(called, [])
+        if not body:
+            return total
+        inner_shapes = {i.name: i.shape for i in body}
+        root = body[-1]
+        if root.opcode == "bitcast" and root.operand_names():
+            src = root.operand_names()[0]
+            root = next((i for i in body if i.name == src), root)
+        if root.opcode == "dynamic-update-slice":
+            _, big = _shape_elems_bytes(root.shape)
+            ops_ = root.operand_names()
+            upd = ops_[1] if len(ops_) > 1 else None
+            _, ub = _shape_elems_bytes(inner_shapes.get(upd, "")) if upd else (0, 0)
+            # remove buffer read + buffer write, add update read + write
+            total = max(0.0, total - 2.0 * big + 2.0 * ub)
+        # Fusion params consumed ONLY by dynamic-slice read just the window
+        # (scan xs unstacking): count slice sizes, not the stacked buffer.
+        for p in body:
+            if p.opcode != "parameter":
+                continue
+            uses = [i for i in body if p.name in i.operand_names()
+                    and i.opcode != "parameter"]
+            if uses and all(u.opcode == "dynamic-slice" for u in uses):
+                _, full = _shape_elems_bytes(p.shape)
+                sliced = sum(_shape_elems_bytes(u.shape)[1] for u in uses)
+                total = max(0.0, total - full + sliced)
+        return total
+
+    def _io_bytes(self, inst: Instruction, shapes: dict,
+                  result_only_max: bool = False) -> float:
+        _, out_b = _shape_elems_bytes(inst.shape)
+        in_b = 0
+        for o in inst.operand_names():
+            if o in shapes:
+                _, b = _shape_elems_bytes(shapes[o])
+                in_b += b
+        if result_only_max:
+            return float(max(out_b, in_b))
+        return float(out_b + in_b)
+
+
+def analyze(text: str) -> Cost:
+    return CostModel(text).evaluate()

@@ -1,0 +1,10 @@
+"""Target-hardware constants: TPU v5e (the dry-run's compile target).
+
+Numbers from the assignment brief; the roofline terms in
+:mod:`repro.roofline.analysis` are computed against these.
+"""
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (effective, one direction)
+HBM_BYTES = 16 * 1024**3     # v5e HBM capacity per chip
+VMEM_BYTES = 128 * 1024**2

@@ -1,0 +1,4 @@
+from .engine import Completion, Request, ServeEngine
+from .sampler import SamplerConfig, sample
+
+__all__ = ["Completion", "Request", "SamplerConfig", "ServeEngine", "sample"]

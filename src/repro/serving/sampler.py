@@ -1,0 +1,24 @@
+"""Token samplers: greedy / temperature / top-k, batched and jit-safe."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: int = 0               # 0 -> no truncation
+
+
+def sample(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
+    """logits (B, V) -> token ids (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k:
+        kth = jax.lax.top_k(l, cfg.top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)

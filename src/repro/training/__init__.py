@@ -1,0 +1,4 @@
+from .optimizer import OptimizerConfig, apply_updates, init_opt_state
+from .train_loop import make_train_step
+
+__all__ = ["OptimizerConfig", "apply_updates", "init_opt_state", "make_train_step"]

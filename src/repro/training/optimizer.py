@@ -1,0 +1,106 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping, from scratch.
+
+Optimizer state mirrors parameter sharding exactly (``m``/``v``/``master``
+inherit each param's PartitionSpec), so FSDP on the "data" axis shards the
+3x-f32 state the same way it shards params — the ZeRO-3 memory layout.
+
+``master`` keeps f32 copies when params train in bf16 (mixed precision);
+set ``keep_master=False`` for pure-f32 training to drop the third copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    keep_master: bool = True
+
+
+def schedule(cfg: OptimizerConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac * lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(cfg: OptimizerConfig, params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.keep_master:
+        # jnp.array (not astype): f32 params must COPY, or param/master
+        # would alias one buffer and double-donation breaks the train step.
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32), params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on matrices (skip norms, biases, scalars)."""
+    name = next((k.key for k in reversed(path) if hasattr(k, "key")), "")
+    return name not in ("scale", "bias", "lam", "b_a", "b_i", "w0", "u",
+                        "ln_scale", "mu", "bq", "bk", "bv", "gate")
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(path, p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        base = master.astype(jnp.float32)
+        if _decay_mask(path):
+            u = u + cfg.weight_decay * base
+        new_master = base - lr * u
+        return new_master, m, v
+
+    flat = jax.tree_util.tree_map_with_path(upd, params, grads, state["m"],
+                                            state["v"], masters)
+    new_master = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+
+    new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.keep_master:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,67 @@
+"""Train-step factory: loss -> grad -> AdamW, with microbatch accumulation.
+
+``make_train_step(model_cfg, opt_cfg, accum)`` returns a pure function
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for ``jax.jit`` with explicit in/out shardings (see repro.launch.train and
+repro.launch.dryrun). Gradient accumulation runs as a ``jax.lax.scan`` over
+microbatches so peak activation memory is one microbatch regardless of the
+global batch; the paper-scale meshes rely on this plus per-block remat.
+
+Cross-pod gradient compression (int8 + error feedback) lives in
+:mod:`repro.distributed.collectives` and wraps the grad pytree when enabled.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import loss_fn
+from repro.models.lm.config import ModelConfig
+
+from .optimizer import OptimizerConfig, apply_updates
+
+
+def _split_microbatches(batch, accum: int):
+    """(B, ...) -> (accum, B/accum, ...) for every leaf."""
+    return jax.tree.map(
+        lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch)
+
+
+def make_loss_fn(model_cfg: ModelConfig):
+    def _loss(params, batch):
+        return loss_fn(params, model_cfg, batch, train=True)
+    return _loss
+
+
+def make_train_step(model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    accum: int = 1, compress_grads=None):
+    """Returns step(params, opt_state, batch)."""
+    loss = make_loss_fn(model_cfg)
+
+    def step(params, opt_state, batch):
+        if accum > 1:
+            micro = _split_microbatches(batch, accum)
+
+            def accum_body(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, total_loss), _ = jax.lax.scan(accum_body, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss_val = total_loss / accum
+        else:
+            loss_val, grads = jax.value_and_grad(loss)(params, batch)
+
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+
+        params, opt_state, metrics = apply_updates(opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss_val
+        return params, opt_state, metrics
+
+    return step

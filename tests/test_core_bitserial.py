@@ -1,0 +1,76 @@
+"""Eq. 1 / Eq. 2 correctness: all bit-serial backends agree exactly with the
+integer-matmul oracle, and the float-facing quantized matmul is within
+quantization-error bounds of the dense product."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    calibrate_minmax, dequantize, quantize, quantized_matmul,
+)
+from repro.core.bitserial import (
+    int_matmul_direct, int_matmul_mxu_plane, int_matmul_popcount,
+)
+
+
+def _codes(key, shape, bits):
+    return jax.random.randint(key, shape, 0, 2**bits)
+
+
+@pytest.mark.parametrize("backend", [int_matmul_popcount, int_matmul_mxu_plane])
+@pytest.mark.parametrize("m,k,n,ab,wb", [
+    (4, 32, 8, 1, 1), (8, 64, 16, 4, 4), (5, 100, 7, 8, 8),
+    (16, 256, 32, 8, 2), (3, 33, 5, 2, 8),
+])
+def test_backends_match_integer_oracle(backend, m, k, n, ab, wb):
+    qa = _codes(jax.random.PRNGKey(0), (m, k), ab)
+    qw = _codes(jax.random.PRNGKey(1), (k, n), wb)
+    got = backend(qa, qw, ab, wb)
+    want = int_matmul_direct(qa, qw)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantized_matmul_error_bound(bits):
+    key = jax.random.PRNGKey(2)
+    a = jax.random.normal(key, (6, 128)) * 2.0
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 10))
+    y = quantized_matmul(a, w, a_bits=bits, w_bits=bits, backend="popcount")
+    ref = a @ w
+    # worst-case quant error per element ~ (|a| sa + |w| sw + sa sw) summed
+    sa = (a.max() - a.min()) / (2**bits - 1)
+    sw = (w.max() - w.min()) / (2**bits - 1)
+    bound = 128 * (jnp.abs(a).max() * sw + jnp.abs(w).max() * sa + sa * sw)
+    assert jnp.abs(y - ref).max() <= bound
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(1, 8),
+    lo=st.floats(-100, 99, allow_nan=False),
+    span=st.floats(0.01, 200, allow_nan=False),
+)
+def test_quantize_roundtrip_bound(bits, lo, span):
+    """|dequant(quant(x)) - x| <= scale/2 for x within the calibration range.
+
+    Tolerance includes an f32-cancellation allowance proportional to the
+    offset magnitude ((x - qmin) loses bits when span << |lo|)."""
+    x = jnp.linspace(lo, lo + span, 97)
+    qp = calibrate_minmax(x, bits)
+    err = jnp.abs(dequantize(quantize(x, qp), qp) - x)
+    tol = float(qp.scale) / 2 + 1e-5 + 2e-5 * abs(lo)
+    assert float(err.max()) <= tol
+
+
+def test_prequantized_weights_path():
+    from repro.core import PIMQuantConfig, prepack_weights
+    from repro.core.bitserial import quantized_matmul as qm
+
+    a = jax.random.normal(jax.random.PRNGKey(4), (4, 64))
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 12))
+    cfg = PIMQuantConfig(w_bits=8, a_bits=8, backend="popcount")
+    codes, wq = prepack_weights(w, cfg)
+    y1 = qm(a, w, 8, 8, backend="popcount")
+    y2 = qm(a, w, 8, 8, backend="popcount", wq=wq, qw=codes)
+    assert jnp.allclose(y1, y2)

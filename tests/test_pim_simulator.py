@@ -1,0 +1,108 @@
+"""PIM architecture simulator: reproduction of the paper's §5 endpoints.
+
+The calibrated simulator must reproduce Table 3 / Fig. 16 by construction
+(calibration), and the *sweep behaviors* (Figs. 13-15) as predictions."""
+import math
+
+import pytest
+
+from repro.pim.area import add_on_area_mm2, chip_area_mm2
+from repro.pim.baselines import (
+    COUNTERPARTS, MODELS, WI_CONFIGS, energy_table, speedup_table,
+)
+from repro.pim.calibrate import (
+    PAPER_CLAIMS, PAPER_ENERGY_FRACTIONS, PAPER_LATENCY_FRACTIONS, calibrated,
+)
+from repro.pim.hierarchy import Geometry
+from repro.pim.simulator import peak_gops, simulate_model
+
+
+def test_resnet50_throughput_matches_table3():
+    r = simulate_model("resnet50")
+    assert r.fps == pytest.approx(PAPER_CLAIMS["throughput_fps"], rel=0.02)
+
+
+def test_latency_breakdown_matches_fig16a():
+    r = simulate_model("resnet50")
+    for phase, frac in PAPER_LATENCY_FRACTIONS.items():
+        assert r.latency_breakdown[phase] == pytest.approx(frac, abs=0.02), phase
+
+
+def test_energy_breakdown_matches_fig16b():
+    r = simulate_model("resnet50")
+    for phase, frac in PAPER_ENERGY_FRACTIONS.items():
+        assert r.energy_breakdown[phase] == pytest.approx(frac, abs=0.02), phase
+
+
+def test_area_matches_table3():
+    assert chip_area_mm2(Geometry()) == pytest.approx(
+        PAPER_CLAIMS["area_mm2"], rel=0.02)
+    split = add_on_area_mm2(Geometry())
+    assert split["compute_units"] / sum(split.values()) == pytest.approx(0.47, abs=0.01)
+
+
+@pytest.mark.parametrize("claim,key,rel", [
+    ("speedup_vs_dram", "DRISA", 0.05), ("speedup_vs_stt", "STT-CiM", 0.05),
+    # IMCE: its Table 3 anchor (80.6/64.5)/(21.8/128.3) = 7.35x per-area at
+    # <8:8> already exceeds the §5.3 claimed 5.1x AVERAGE — internally
+    # inconsistent under any monotone precision law. We pin the Table 3
+    # anchor and accept the residual (see EXPERIMENTS.md discrepancies).
+    ("speedup_vs_sot", "IMCE", 0.35),
+    ("speedup_vs_reram", "PRIME", 0.05),
+])
+def test_average_speedups_match_section53(claim, key, rel):
+    table = speedup_table()
+    vals = [v for (m, cfg, name), v in table.items() if name == key]
+    avg = sum(vals) / len(vals)
+    assert avg == pytest.approx(PAPER_CLAIMS[claim], rel=rel), (key, avg)
+
+
+def test_speedup_grows_with_precision():
+    """§5.3: 'the improvement ... becomes increasingly evident when <W:I>
+    increases' — check monotone trend vs the STT baseline on resnet50."""
+    table = speedup_table()
+    seq = [table[("resnet50", cfg, "STT-CiM")] for cfg in WI_CONFIGS]
+    assert seq[-1] > seq[0], seq
+
+
+@pytest.mark.parametrize("claim,key", [
+    ("energy_vs_dram", "DRISA"), ("energy_vs_stt", "STT-CiM"),
+    ("energy_vs_reram", "PRIME"),
+])
+def test_average_energy_ratios_match_section53(claim, key):
+    table = energy_table()
+    vals = [v for (m, cfg, name), v in table.items() if name == key]
+    avg = sum(vals) / len(vals)
+    assert avg == pytest.approx(PAPER_CLAIMS[claim], rel=0.05), (key, avg)
+
+
+def test_capacity_sweep_shape_fig13a():
+    """Peak perf/area rises with capacity then flattens; efficiency falls."""
+    geoms = [Geometry().with_capacity(c) for c in (16, 32, 64, 128)]
+    perf_per_area = [peak_gops(g) / chip_area_mm2(g) for g in geoms]
+    assert perf_per_area[1] > perf_per_area[0] * 0.95
+    # energy efficiency (fps/W proxy: 1/energy) decreases with capacity
+    effs = [1.0 / simulate_model("resnet50", geometry=g).energy for g in geoms]
+    assert effs[-1] < effs[0]
+
+
+def test_bandwidth_sweep_fig13b():
+    """Throughput rises with bus width (weight broadcast de-bottlenecks)."""
+    fps = [simulate_model("resnet50", geometry=Geometry().with_bus(b)).fps
+           for b in (32, 64, 128, 256)]
+    assert fps[0] < fps[1] < fps[2]
+
+
+def test_precision_scaling():
+    """<2:2> must beat <8:8> in fps (bit-serial work ~ W*I plane pairs)."""
+    f22 = simulate_model("resnet50", ab=2, wb=2).fps
+    f88 = simulate_model("resnet50", ab=8, wb=8).fps
+    f1616 = simulate_model("resnet50", ab=16, wb=16).fps
+    assert f22 > f88 > f1616
+
+
+def test_all_models_simulate():
+    for m in MODELS:
+        r = simulate_model(m)
+        assert r.fps > 0 and r.energy > 0
+        assert math.isfinite(r.latency)

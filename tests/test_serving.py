@@ -1,0 +1,74 @@
+"""Serving engine: greedy generation parity vs whole-sequence forward,
+continuous-batching slot bookkeeping, snapshot determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm import ModelConfig, forward, init
+from repro.serving import Request, SamplerConfig, ServeEngine
+
+CFG = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                  vocab=51, remat="none", dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init(CFG, jax.random.PRNGKey(0))
+    return params
+
+
+def _greedy_reference(params, prompt, n_new):
+    """Autoregressive greedy decode via repeated full forward (oracle)."""
+    toks = list(prompt)
+    for _ in range(n_new):
+        logits, _ = forward(params, CFG, jnp.asarray([toks], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_engine_matches_naive_greedy(setup):
+    params = setup
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    n_new = 6
+    want = _greedy_reference(params, prompt.tolist(), n_new)
+    eng = ServeEngine(CFG, params, max_batch=2, max_len=64,
+                      sampler=SamplerConfig(temperature=0.0))
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=n_new))
+    done = eng.run()
+    assert len(done) == 1
+    assert done[0].tokens == want, (done[0].tokens, want)
+
+
+def test_continuous_batching_all_complete(setup):
+    params = setup
+    eng = ServeEngine(CFG, params, max_batch=2, max_len=64)
+    rng = np.random.default_rng(0)
+    n_req = 5  # > max_batch forces slot recycling
+    for rid in range(n_req):
+        L = int(rng.integers(2, 9))
+        eng.submit(Request(rid=rid, prompt=rng.integers(
+            0, CFG.vocab, size=L).astype(np.int32), max_new_tokens=4))
+    done = eng.run()
+    assert sorted(c.rid for c in done) == list(range(n_req))
+    assert all(len(c.tokens) == 4 for c in done)
+
+
+def test_batched_slots_are_isolated(setup):
+    """Two different prompts decoded together equal their solo decodes."""
+    params = setup
+    p1 = np.array([7, 8, 9], np.int32)
+    p2 = np.array([10, 11, 12, 13], np.int32)
+
+    def solo(prompt):
+        e = ServeEngine(CFG, params, max_batch=2, max_len=64)
+        e.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+        return e.run()[0].tokens
+
+    w1, w2 = solo(p1), solo(p2)
+    e = ServeEngine(CFG, params, max_batch=2, max_len=64)
+    e.submit(Request(rid=1, prompt=p1, max_new_tokens=5))
+    e.submit(Request(rid=2, prompt=p2, max_new_tokens=5))
+    done = {c.rid: c.tokens for c in e.run()}
+    assert done[1] == w1
+    assert done[2] == w2

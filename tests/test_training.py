@@ -1,0 +1,199 @@
+"""Training substrate: optimizer correctness, accumulation equivalence,
+checkpoint roundtrip/atomicity, fault-tolerant loop, grad compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm import ModelConfig, init
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.fault_tolerance import (
+    FTConfig, RestartPolicy, StragglerDetector, run_resilient,
+)
+from repro.training.optimizer import OptimizerConfig, apply_updates, init_opt_state
+from repro.training.train_loop import make_train_step
+
+CFG = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                  vocab=61, remat="none", dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init(CFG, jax.random.PRNGKey(0))
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=100,
+                           keep_master=False)
+    opt = init_opt_state(ocfg, params)
+    data = SyntheticLM(DataConfig(vocab=CFG.vocab, seq_len=16, global_batch=4))
+    return params, ocfg, opt, data
+
+
+def test_loss_decreases(setup):
+    params, ocfg, opt, data = setup
+    step = jax.jit(make_train_step(CFG, ocfg))
+    losses = []
+    for i in range(20):
+        b = jax.tree.map(jnp.asarray, data.batch(i))
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_grad_accum_matches_full_batch(setup):
+    params, ocfg, opt, data = setup
+    b = jax.tree.map(jnp.asarray, data.batch(0))
+    s1 = jax.jit(make_train_step(CFG, ocfg, accum=1))
+    s4 = jax.jit(make_train_step(CFG, ocfg, accum=4))
+    p1, o1, m1 = s1(params, opt, b)
+    p4, o4, m4 = s4(params, opt, b)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    d = max(float(jnp.abs(a - c).max())
+            for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 1e-5, f"accum changed the update by {d}"
+
+
+def test_adamw_decay_mask():
+    p = {"w_in": jnp.ones((4, 4)), "norm": {"scale": jnp.ones((4,))}}
+    g = jax.tree.map(jnp.zeros_like, p)
+    ocfg = OptimizerConfig(lr=1.0, warmup_steps=0, total_steps=1,
+                           weight_decay=0.5, keep_master=False)
+    st = init_opt_state(ocfg, p)
+    newp, _, _ = apply_updates(ocfg, p, g, st)
+    assert float(newp["w_in"][0, 0]) < 1.0          # decayed
+    assert float(newp["norm"]["scale"][0]) == 1.0   # masked
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    params, ocfg, opt, _ = setup
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, (params, opt))
+    assert ckpt.latest_step(d) == 7
+    (p2, o2), manifest = ckpt.restore(d, (params, opt))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["step"] == 7
+
+
+def test_checkpoint_atomic_pointer(tmp_path, setup):
+    params, _, opt, _ = setup
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, (params,))
+    ckpt.save(d, 2, (params,))
+    assert ckpt.latest_step(d) == 2
+    # a stale tmp dir must never be visible as a checkpoint
+    assert not any(x.startswith(".tmp") for x in os.listdir(d)
+                   if os.path.isdir(os.path.join(d, x)))
+
+
+def test_checkpoint_async(tmp_path, setup):
+    params, _, opt, _ = setup
+    d = str(tmp_path / "ck")
+    t = ckpt.save_async(d, 3, (params,))
+    t.join()
+    assert ckpt.latest_step(d) == 3
+
+
+def test_resilient_loop_recovers_from_injected_failures(tmp_path, setup):
+    params, ocfg, opt, data = setup
+    step = jax.jit(make_train_step(CFG, ocfg))
+    ft = FTConfig(ckpt_dir=str(tmp_path / "ft"), ckpt_every=5, max_failures=5)
+    boom = {"left": 2}
+
+    def injector(s):
+        if s == 12 and boom["left"] > 0:
+            boom["left"] -= 1
+            raise RuntimeError("injected node failure")
+
+    p, o, stats = run_resilient(
+        step, params, opt, data, 20, ft,
+        put_batch=lambda b: jax.tree.map(jnp.asarray, b),
+        fail_injector=injector)
+    assert stats["restarts"] == 2
+    assert ckpt.latest_step(ft.ckpt_dir) == 19
+
+
+def test_resilient_restart_is_deterministic(tmp_path, setup):
+    """A run preempted at step K and resumed equals an uninterrupted run."""
+    params, ocfg, opt, data = setup
+    step = jax.jit(make_train_step(CFG, ocfg))
+
+    def run(ckdir, inject):
+        ft = FTConfig(ckpt_dir=ckdir, ckpt_every=4, max_failures=3)
+        boom = {"armed": inject}
+
+        def injector(s):
+            if s == 9 and boom["armed"]:
+                boom["armed"] = False
+                raise RuntimeError("preempt")
+
+        return run_resilient(step, params, opt, data, 14, ft,
+                             put_batch=lambda b: jax.tree.map(jnp.asarray, b),
+                             fail_injector=injector)
+
+    p_a, _, _ = run(str(tmp_path / "a"), inject=False)
+    p_b, _, stats_b = run(str(tmp_path / "b"), inject=True)
+    assert stats_b["restarts"] == 1
+    for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(z_thresh=4.0)
+    for _ in range(32):
+        det.observe(0.10)
+    assert det.observe(0.101) is False
+    assert det.observe(5.0) is True
+    assert det.flagged == 1
+
+
+def test_restart_policy_budget():
+    pol = RestartPolicy(max_failures=2, backoff_s=0.01)
+    assert pol.on_failure() == 0.01
+    assert pol.on_failure() == 0.02
+    with pytest.raises(RuntimeError):
+        pol.on_failure()
+
+
+def test_grad_compression_preserves_training(setup):
+    """Compressed-gradient training still reduces loss (error feedback)."""
+    from repro.distributed.collectives import (
+        CompressionConfig, init_error_feedback, make_grad_compressor)
+
+    params, ocfg, opt, data = setup
+    comp = make_grad_compressor(CompressionConfig(enabled=True, bits=8))
+    err = init_error_feedback(params)
+
+    def compress(grads, _err=err):
+        g, _ = comp(grads, _err)
+        return g
+
+    step = jax.jit(make_train_step(CFG, ocfg, compress_grads=compress))
+    losses = []
+    for i in range(15):
+        b = jax.tree.map(jnp.asarray, data.batch(i))
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.05
+
+
+def test_pim_qat_train_step_bf16():
+    """--pim QAT path: STE fake-quant must not promote bf16 scan carries."""
+    import dataclasses
+
+    from repro.core.pim_layers import PIMQuantConfig
+
+    cfg_pim = dataclasses.replace(
+        CFG, dtype="bfloat16", pim=PIMQuantConfig(w_bits=8, a_bits=8))
+    from repro.models.lm import init as minit
+    from repro.models.lm.model import cast_params
+
+    params = cast_params(minit(cfg_pim, jax.random.PRNGKey(0)), jnp.bfloat16)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = init_opt_state(ocfg, params)
+    data = SyntheticLM(DataConfig(vocab=CFG.vocab, seq_len=16, global_batch=2))
+    step = jax.jit(make_train_step(cfg_pim, ocfg))
+    b = jax.tree.map(jnp.asarray, data.batch(0))
+    params, opt, m = step(params, opt, b)
+    assert jnp.isfinite(m["loss"])
