@@ -1,11 +1,16 @@
 """Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--only X]``.
 
 Sections map 1:1 onto the paper's tables/figures (+ the TPU-side roofline
-artifacts). Each renders as an aligned text table.
+artifacts). Each renders as an aligned text table. Kernel sections are
+additionally written to ``BENCH_kernels.json`` at the repo root so future
+PRs can track the perf trajectory (cached-weight vs per-call serving,
+fused-conv vs im2col, backend sweep).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -41,21 +46,46 @@ def main(argv=None):
         ("fig17: add-on area breakdown", paper_figures.fig17_area_overhead),
         ("paper-claims check (§5.3)", paper_figures.paper_claims_check),
         ("kernel: Eq.1 backend comparison (CPU)", kernel_bench.backend_comparison),
+        ("kernel: cached PackedWeight vs per-call quantize+pack",
+         kernel_bench.serving_path_comparison),
+        ("kernel: fused implicit-im2col conv vs materialized",
+         kernel_bench.fused_conv_comparison),
         ("kernel: BlockSpec tile plans (TPU target)", kernel_bench.tile_plan_sweep),
         ("roofline: single-pod 16x16 (from dry-run)", lm_roofline.roofline_table),
         ("dry-run: multi-pod 2x16x16 compile status", lm_roofline.multipod_check),
         ("perf: baseline vs optimized step-time bound", lm_roofline.baseline_vs_optimized),
     ]
+    # Kernel sections feeding BENCH_kernels.json (rows reused, not re-run).
+    json_keys = {
+        kernel_bench.serving_path_comparison: "serving_cached_vs_percall",
+        kernel_bench.fused_conv_comparison: "fused_conv_vs_im2col",
+        kernel_bench.backend_comparison: "backend_comparison",
+        kernel_bench.tile_plan_sweep: "tile_plans",
+    }
+    payload = {}
     t0 = time.time()
     failures = []
     for title, fn in sections:
         if args.only and args.only not in title:
             continue
         try:
-            render(title, fn())
+            rows = fn()
+            render(title, rows)
+            if fn in json_keys:
+                payload[json_keys[fn]] = rows
         except Exception as e:  # keep the suite running; report at the end
             failures.append((title, repr(e)))
             print(f"\n== {title} FAILED: {e!r}")
+    if payload:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_kernels.json")
+        try:
+            with open(path, "w") as fh:
+                json.dump(payload, fh, indent=1)
+            print(f"\nwrote {path}")
+        except Exception as e:
+            failures.append(("BENCH_kernels.json", repr(e)))
+
     print(f"\nbenchmarks done in {time.time() - t0:.1f}s")
     if failures:
         for t, e in failures:

@@ -26,7 +26,10 @@ def main():
           f"{'sim fps':>8s} {'mJ/frame':>9s}")
     for bits in (2, 4, 8):
         cfg = PIMQuantConfig(w_bits=bits, a_bits=bits, backend="int-direct")
-        y = resnet.apply(params, x, cfg=cfg)
+        # Deployment mode: weights quantize+pack exactly once (the paper
+        # programs subarrays once); apply() then only quantizes activations.
+        packed = resnet.prepack(params, cfg)
+        y = resnet.apply(packed, x, cfg=cfg)
         agree = float((y.argmax(-1) == ref.argmax(-1)).mean())
         dmax = float(jnp.abs(y - ref).max())
         r = simulate_model("resnet50", ab=bits, wb=bits)

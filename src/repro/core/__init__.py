@@ -7,10 +7,19 @@ Public surface:
   pim_layers    — PIMLinear / PIMConv2D drop-in layers + PIMQuantConfig
   mapping       — the paper's data-mapping scheme as VMEM/subarray tile plans
 """
-from .bitserial import int_matmul, quantized_matmul
+from .bitserial import int_matmul, int_matmul_prepacked, quantized_matmul
 from .bitslice import bitplanes, pack_bits, plane_weights, popcount, slice_and_pack, unpack_bits
 from .mapping import SubarrayPlan, TilePlan, plan_matmul, plan_subarrays
-from .pim_layers import PIMQuantConfig, pim_conv2d, pim_linear, prepack_weights
+from .packed import PackedConvWeight, PackedWeight, prepack, prepack_conv
+from .pim_layers import (
+    PIMQuantConfig,
+    fuse_conv_heuristic,
+    pim_conv2d,
+    pim_linear,
+    prepack_conv2d,
+    prepack_linear,
+    prepack_weights,
+)
 from .quantize import (
     QuantParams,
     affine_correction,
@@ -26,7 +35,9 @@ __all__ = [
     "fake_quant", "fold_batchnorm", "quantize",
     "bitplanes", "pack_bits", "plane_weights", "popcount", "slice_and_pack",
     "unpack_bits",
-    "int_matmul", "quantized_matmul",
-    "PIMQuantConfig", "pim_conv2d", "pim_linear", "prepack_weights",
+    "int_matmul", "int_matmul_prepacked", "quantized_matmul",
+    "PackedConvWeight", "PackedWeight", "prepack", "prepack_conv",
+    "PIMQuantConfig", "fuse_conv_heuristic", "pim_conv2d", "pim_linear",
+    "prepack_conv2d", "prepack_linear", "prepack_weights",
     "SubarrayPlan", "TilePlan", "plan_matmul", "plan_subarrays",
 ]

@@ -9,7 +9,9 @@ Three interchangeable execution backends, all bit-exact w.r.t. each other:
               weights. This is what the Pallas kernel
               (:mod:`repro.kernels.bitserial_matmul`) implements with VMEM
               blocking; the version here is the XLA expression of the same
-              algorithm and doubles as its oracle.
+              algorithm and doubles as its oracle. The (B, N, Kp) broadcast
+              is chunked over output columns (``_N_CHUNK``) so the oracle
+              stays compute- rather than memory-bound.
 
 ``mxu-plane`` the TPU-codesign alternative: each (n, m) plane pair is a
               {0,1} matrix contraction, which the MXU executes natively —
@@ -23,6 +25,10 @@ Three interchangeable execution backends, all bit-exact w.r.t. each other:
 Accumulation is int32 and exact while ``sum_k qa*qw < 2^31`` (K up to ~32k at
 <8:8>); overflow wraps identically in every backend (two's complement), so
 cross-backend equivalence holds mod 2^32 unconditionally.
+
+Weights may arrive as a :class:`repro.core.packed.PackedWeight` — the
+deployment fast path where codes, planes and column sums were computed once
+at prepack time (the paper's "program subarrays once"); see DESIGN.md §3.
 """
 from __future__ import annotations
 
@@ -32,33 +38,60 @@ import jax
 import jax.numpy as jnp
 
 from . import bitslice
+from .packed import PackedWeight, prepack
 from .quantize import QuantParams, affine_correction, calibrate_minmax, quantize
 
 Backend = ("popcount", "mxu-plane", "int-direct")
+
+# Output-column chunk of the popcount oracle: bounds the (B, chunk, Kp)
+# broadcast intermediate to one lane group per step.
+_N_CHUNK = 128
 
 
 # ---------------------------------------------------------------------------
 # Integer core: P = qa @ qw  (qa: (..., K) codes, qw: (K, N) codes)
 # ---------------------------------------------------------------------------
 
+def int_matmul_popcount_packed(pa: jax.Array, pw: jax.Array,
+                               a_bits: int, w_bits: int) -> jax.Array:
+    """Eq. 1 on prepacked planes. pa (a_bits, B, Kp), pw (w_bits, N, Kp).
+
+    Output columns are processed in ``_N_CHUNK`` groups via ``lax.map`` so
+    the broadcast AND intermediate is (B, _N_CHUNK, Kp), not (B, N, Kp) —
+    the full-width broadcast made the XLA oracle memory-bound at large N.
+    """
+    b = pa.shape[1]
+    n = pw.shape[1]
+    nc = min(_N_CHUNK, n)
+    pad = -n % nc
+    if pad:
+        pw = jnp.pad(pw, ((0, 0), (0, pad), (0, 0)))
+    chunks = jnp.moveaxis(  # (n_chunks, w_bits, nc, Kp)
+        pw.reshape(w_bits, (n + pad) // nc, nc, pw.shape[-1]), 1, 0)
+
+    nm = jnp.stack(jnp.meshgrid(jnp.arange(a_bits), jnp.arange(w_bits),
+                                indexing="ij"), -1).reshape(-1, 2)
+
+    def one_chunk(pw_c):
+        def plane_pair(carry, i):
+            nb, mb = i[0], i[1]
+            # The sense-amp AND against the stored plane, per-column bitcount.
+            cnt = bitslice.popcount(pa[nb][:, None, :] & pw_c[mb][None, :, :]).sum(-1)
+            return carry + (cnt << (nb + mb)), None
+
+        out, _ = jax.lax.scan(plane_pair, jnp.zeros((b, nc), jnp.int32), nm)
+        return out
+
+    out = jax.lax.map(one_chunk, chunks)          # (n_chunks, B, nc)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, n + pad)
+    return out[:, :n]
+
+
 def int_matmul_popcount(qa: jax.Array, qw: jax.Array, a_bits: int, w_bits: int) -> jax.Array:
     """Eq. 1 with packed planes + popcount. qa (B, K), qw (K, N) -> (B, N) i32."""
-    pa = bitslice.slice_and_pack(qa, a_bits)  # (a_bits, B, Kp)
+    pa = bitslice.slice_and_pack(qa, a_bits)    # (a_bits, B, Kp)
     pw = bitslice.slice_and_pack(qw.T, w_bits)  # (w_bits, N, Kp)
-
-    def plane_pair(carry, nm):
-        n, m = nm
-        a = pa[n]  # (B, Kp) uint32
-        w = pw[m]  # (N, Kp) uint32
-        # The sense-amp AND against the stored plane, then per-column bitcount.
-        cnt = bitslice.popcount(a[:, None, :] & w[None, :, :]).sum(-1)  # (B, N)
-        return carry + (cnt << (n + m)), None
-
-    nm = jnp.stack(jnp.meshgrid(jnp.arange(a_bits), jnp.arange(w_bits), indexing="ij"), -1)
-    nm = nm.reshape(-1, 2)
-    init = jnp.zeros((qa.shape[0], qw.shape[1]), jnp.int32)
-    out, _ = jax.lax.scan(lambda c, i: plane_pair(c, (i[0], i[1])), init, nm)
-    return out
+    return int_matmul_popcount_packed(pa, pw, a_bits, w_bits)
 
 
 def int_matmul_mxu_plane(qa: jax.Array, qw: jax.Array, a_bits: int, w_bits: int) -> jax.Array:
@@ -100,13 +133,36 @@ def int_matmul(qa, qw, a_bits, w_bits, backend="popcount"):
     return _BACKENDS[backend](qa, qw, a_bits, w_bits)
 
 
+def int_matmul_prepacked(qa: jax.Array, w: PackedWeight, a_bits: int,
+                         backend: str = "popcount") -> jax.Array:
+    """P = qa @ w.codes using whatever representation the backend wants.
+
+    The popcount/pallas backends consume the prepacked planes directly —
+    the weight side of quantize->slice->pack never re-runs (the in-array
+    operand-reuse property the paper's subarray programming buys).
+    """
+    if backend == "int-direct":
+        return int_matmul_direct(qa, w.codes)
+    if backend == "mxu-plane":
+        return int_matmul_mxu_plane(qa, w.codes, a_bits, w.bits)
+    if backend == "popcount":
+        pa = bitslice.slice_and_pack(qa, a_bits)
+        return int_matmul_popcount_packed(pa, w.planes, a_bits, w.bits)
+    if backend == "pallas":
+        from repro.kernels import ops as _kops
+
+        return _kops.bitserial_matmul(qa, a_bits=a_bits, w_bits=w.bits,
+                                      pw=w.planes)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
 # ---------------------------------------------------------------------------
 # Float-facing quantized matmul (Eq. 2 calibration + Eq. 1 core + correction)
 # ---------------------------------------------------------------------------
 
 def quantized_matmul(
-    a: jax.Array,  # (..., K) float
-    w: jax.Array,  # (K, N) float
+    a: jax.Array,                    # (..., K) float
+    w,                               # (K, N) float | PackedWeight
     a_bits: int = 8,
     w_bits: int = 8,
     backend: str = "popcount",
@@ -115,20 +171,24 @@ def quantized_matmul(
 ) -> jax.Array:
     """Full paper pipeline: calibrate -> quantize -> bit-serial P -> dequantize.
 
-    Weights may be pre-quantized (``wq``/``qw``) — the deployment mode where
-    codes live in memory and only activations are quantized on the fly (the
-    paper's weights are programmed into subarrays once).
+    Weights may be a :class:`PackedWeight` (the deployment mode: codes,
+    planes and column sums live in memory and only activations quantize on
+    the fly — the paper's weights are programmed into subarrays once), or a
+    float array, optionally with legacy pre-quantized ``wq``/``qw``.
     """
     lead = a.shape[:-1]
     k = a.shape[-1]
     a2 = a.reshape(-1, k)
     aq = calibrate_minmax(a2, a_bits)
     qa = quantize(a2, aq)
-    if qw is None:
-        wq = calibrate_minmax(w, w_bits)
-        qw = quantize(w, wq)
-    p = int_matmul(qa, qw, a_bits, w_bits, backend)
+    if isinstance(w, PackedWeight):
+        packed = w
+    elif qw is not None:
+        packed = PackedWeight(codes=qw, planes=bitslice.slice_and_pack(qw.T, wq.bits),
+                              col_sums=qw.sum(0).astype(jnp.int32), wq=wq)
+    else:
+        packed = prepack(w, w_bits)
+    p = int_matmul_prepacked(qa, packed, a_bits, backend)
     sa = qa.sum(-1, keepdims=True)
-    sw = qw.sum(0)
-    y = affine_correction(p, sa, sw, k, aq, wq)
-    return y.reshape(*lead, w.shape[-1])
+    y = affine_correction(p, sa, packed.col_sums, k, aq, packed.wq)
+    return y.reshape(*lead, packed.shape[-1])

@@ -1,0 +1,116 @@
+"""Prepacked weights — the paper's "program subarrays once" step as a pytree.
+
+On NAND-SPIN, weights are written into the subarrays exactly once at
+deployment; every inference afterwards only streams activations. The TPU
+analog is :class:`PackedWeight`: the weight's integer codes, its packed
+uint32 bit-planes (the subarray image), the Eq. 2 quantization parameters
+and the precomputed column sums of the affine correction, bundled as one
+registered pytree so it jits, shards and scans like any parameter leaf.
+
+``prepack`` builds it for a (K, N) matmul weight; ``prepack_conv`` for a
+(KH, KW, C, O) convolution weight, which additionally carries the
+channel-packed per-kernel-row planes consumed by the fused implicit-im2col
+kernel (:mod:`repro.kernels.conv2d_fused`). See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import bitslice
+from .quantize import QuantParams, calibrate_minmax, dequantize, quantize
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedWeight:
+    """A (K, N) weight quantized and bit-plane-packed once.
+
+    codes     (K, N) int32   — Eq. 2 codes (the multi-bit matrix)
+    planes    (bits, N, KW) uint32 — K-packed planes of ``codes.T`` (the
+              subarray image the popcount/pallas backends AND against)
+    col_sums  (N,) int32     — sum_k codes[k, n], precomputed for the affine
+              correction (Sw in quantize.py's dot-product algebra)
+    wq        QuantParams    — scale/qmin/bits of the weight quantization
+    """
+
+    codes: jax.Array
+    planes: jax.Array
+    col_sums: jax.Array
+    wq: QuantParams
+
+    @property
+    def bits(self) -> int:
+        return self.wq.bits
+
+    @property
+    def shape(self) -> tuple:
+        return self.codes.shape
+
+    def to_float(self) -> jax.Array:
+        """Dequantized master weight (fallback for non-quantized paths)."""
+        return dequantize(self.codes, self.wq)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedConvWeight:
+    """A (KH, KW, C, O) conv weight prepacked for both conv lowering paths.
+
+    mat          PackedWeight over the (KH*KW*C, O) im2col matrix — drives
+                 the materialized path and the affine correction.
+    fused_planes (KH, bits, O, KW, CW) uint32 — channel-packed planes per
+                 kernel row, the layout the fused implicit-im2col kernel
+                 streams one (kh) slab at a time.
+    """
+
+    mat: PackedWeight
+    fused_planes: jax.Array
+    kernel_shape: tuple = dataclasses.field(metadata=dict(static=True),
+                                            default=(1, 1, 1, 1))
+
+    @property
+    def bits(self) -> int:
+        return self.mat.bits
+
+    @property
+    def wq(self) -> QuantParams:
+        return self.mat.wq
+
+    def to_float(self) -> jax.Array:
+        return self.mat.to_float().reshape(self.kernel_shape)
+
+
+def prepack(w: jax.Array, w_bits: int) -> PackedWeight:
+    """Quantize + bit-slice + lane-pack a (K, N) weight once.
+
+    Everything here is jnp, so ``jax.vmap(prepack)`` prepacks scan-stacked
+    (R, K, N) parameter leaves (the LM layer stack) in one shot.
+    """
+    wq = calibrate_minmax(w, w_bits)
+    codes = quantize(w, wq)
+    planes = bitslice.slice_and_pack(codes.T, w_bits)  # (bits, N, KW)
+    return PackedWeight(codes=codes, planes=planes,
+                        col_sums=codes.sum(0).astype(jnp.int32), wq=wq)
+
+
+def prepack_conv(w: jax.Array, w_bits: int) -> PackedConvWeight:
+    """Prepack a (KH, KW, C, O) conv weight for both lowering paths."""
+    kh, kw, c, o = w.shape
+    wq = calibrate_minmax(w, w_bits)
+    codes = quantize(w, wq)                              # (KH, KW, C, O)
+    flat = codes.reshape(kh * kw * c, o)                 # im2col order
+    mat = PackedWeight(
+        codes=flat,
+        planes=bitslice.slice_and_pack(flat.T, w_bits),
+        col_sums=flat.sum(0).astype(jnp.int32),
+        wq=wq,
+    )
+    # Fused layout: per kernel row kh, O-major, channels packed into words.
+    wt = codes.transpose(0, 3, 1, 2)                     # (KH, O, KW, C)
+    fused = bitslice.slice_and_pack(wt, w_bits)          # (bits, KH, O, KW, CW)
+    fused = fused.transpose(1, 0, 2, 3, 4)               # (KH, bits, O, KW, CW)
+    return PackedConvWeight(mat=mat, fused_planes=fused,
+                            kernel_shape=(kh, kw, c, o))

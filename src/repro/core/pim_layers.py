@@ -9,9 +9,18 @@ Execution modes:
   * inference     -> Eq. 1 bit-serial matmul on the selected backend
                      ("popcount" | "mxu-plane" | "int-direct" | "pallas")
 
-Conv2D lowers to the same integer matmul via im2col, exactly how the paper
-lowers convolution onto subarray dot products (a sliding window *is* the
-row-activation schedule of Fig. 8).
+Weights may be float master arrays (quantized per call) or prepacked
+:class:`PackedWeight`/:class:`PackedConvWeight` pytrees built once at
+deployment by :func:`prepack_linear`/:func:`prepack_conv2d` — the paper's
+"program subarrays once" step. See DESIGN.md §3.
+
+Conv2D lowers to the same integer matmul two ways: a materialized im2col
+patch matrix (cheap for 1x1 kernels and small maps), or the fused
+implicit-im2col Pallas kernel that walks patch offsets inside the grid and
+never builds the (N*OH*OW, KH*KW*C) matrix — exactly how the paper slides
+the weight buffer over resident input planes (Fig. 8). The choice is a
+shape-dispatch heuristic (:func:`fuse_conv_heuristic`) or forced via
+``conv_mode``.
 """
 from __future__ import annotations
 
@@ -21,8 +30,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .bitserial import quantized_matmul
-from .quantize import calibrate_minmax, fake_quant, quantize
+from .bitserial import int_matmul_prepacked, quantized_matmul
+from .packed import PackedConvWeight, PackedWeight, prepack, prepack_conv
+from .quantize import affine_correction, calibrate_minmax, fake_quant, quantize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,9 +72,19 @@ def _constrain_weight(w: jax.Array, role: str) -> jax.Array:
     return sh.constrain(w, spec)
 
 
+def prepack_linear(w: jax.Array, cfg: PIMQuantConfig) -> PackedWeight:
+    """Quantize + pack a (K, N) weight once for repeated ``pim_linear`` calls."""
+    return prepack(w, cfg.w_bits)
+
+
+def prepack_conv2d(w: jax.Array, cfg: PIMQuantConfig) -> PackedConvWeight:
+    """Quantize + pack a (KH, KW, C, O) conv weight once for ``pim_conv2d``."""
+    return prepack_conv(w, cfg.w_bits)
+
+
 def pim_linear(
     x: jax.Array,
-    w: jax.Array,
+    w: jax.Array | PackedWeight,
     b: jax.Array | None = None,
     cfg: PIMQuantConfig | None = None,
     train: bool = False,
@@ -72,16 +92,22 @@ def pim_linear(
 ) -> jax.Array:
     """y = x @ w (+ b) through the paper's bit-serial pipeline.
 
-    ``x``: (..., K) float; ``w``: (K, N) float master weights. ``role``
-    picks the at-use sharding policy (see ``_constrain_weight``).
+    ``x``: (..., K) float; ``w``: (K, N) float master weights or a
+    :class:`PackedWeight` prepacked at deployment. ``role`` picks the at-use
+    sharding policy (see ``_constrain_weight``; prepacked weights keep the
+    sharding they were packed with).
     """
-    w = _constrain_weight(w, role)
+    packed = isinstance(w, PackedWeight)
+    if not packed:
+        w = _constrain_weight(w, role)
     if cfg is None or not cfg.enabled:
-        y = x @ w.astype(x.dtype)
+        wf = w.to_float() if packed else w
+        y = x @ wf.astype(x.dtype)
     elif train:
         # QAT: quantization error in the forward pass, STE gradients.
+        # Prepacked weights are an inference artifact; train on the masters.
         xq = fake_quant(x, cfg.a_bits)
-        wq = fake_quant(w, cfg.w_bits)
+        wq = fake_quant(w.to_float() if packed else w, cfg.w_bits)
         y = xq @ wq.astype(xq.dtype)
     else:
         y = quantized_matmul(
@@ -92,8 +118,9 @@ def pim_linear(
     return y
 
 
-def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> tuple[jax.Array, int, int]:
-    """NHWC -> (N*OH*OW, KH*KW*C) patches."""
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int
+            ) -> tuple[jax.Array, int, int]:
+    """NHWC -> (N*OH*OW, KH*KW*C) patches (float x or integer codes)."""
     n, h, w, c = x.shape
     x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     oh = (h + 2 * padding - kh) // stride + 1
@@ -105,32 +132,99 @@ def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> tuple[
     return patches.reshape(n * oh * ow, kh * kw * c), oh, ow
 
 
+# Fused-conv dispatch: below this patch-matrix size the materialized path's
+# single big GEMM beats the fused kernel's per-row streaming.
+_FUSE_MIN_BYTES = 4 << 20
+
+
+def fuse_conv_heuristic(n: int, oh: int, ow: int, kh: int, kw: int, c: int,
+                        backend: str) -> bool:
+    """Should ``pim_conv2d`` take the fused implicit-im2col path?
+
+    Fused pays when (a) the backend runs the paper dataflow on the Pallas
+    kernels (the fused kernel *is* that dataflow; the XLA backends have no
+    kernel to fuse into) and (b) the materialized (N*OH*OW, KH*KW*C) patch
+    matrix is a real HBM blow-up — 1x1 kernels materialize for free (the
+    patch matrix is a reshape) and tiny maps fit in cache anyway.
+    """
+    if backend != "pallas":
+        return False
+    if kh == kw == 1:
+        return False
+    return 4 * n * oh * ow * kh * kw * c >= _FUSE_MIN_BYTES
+
+
 def pim_conv2d(
     x: jax.Array,          # NHWC
-    w: jax.Array,          # (KH, KW, C, O)
+    w: jax.Array | PackedConvWeight,   # (KH, KW, C, O) or prepacked
     b: jax.Array | None = None,
     stride: int = 1,
     padding: int = 0,
     cfg: PIMQuantConfig | None = None,
     train: bool = False,
+    conv_mode: str = "auto",           # "auto" | "fused" | "im2col"
 ) -> jax.Array:
-    kh, kw, c, o = w.shape
+    packed = isinstance(w, PackedConvWeight)
+    kh, kw, c, o = w.kernel_shape if packed else w.shape
     if cfg is None or not cfg.enabled:
+        wf = w.to_float() if packed else w
         y = jax.lax.conv_general_dilated(
-            x, w, (stride, stride), [(padding, padding)] * 2,
+            x, wf.astype(x.dtype), (stride, stride), [(padding, padding)] * 2,
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         )
         return y + b if b is not None else y
-    cols, oh, ow = _im2col(x, kh, kw, stride, padding)
-    y = pim_linear(cols, w.reshape(kh * kw * c, o), b, cfg, train)
-    return y.reshape(x.shape[0], oh, ow, o)
+    if train:
+        wf = w.to_float() if packed else w
+        cols, oh, ow = _im2col(x, kh, kw, stride, padding)
+        y = pim_linear(cols, wf.reshape(kh * kw * c, o), b, cfg, train=True)
+        return y.reshape(x.shape[0], oh, ow, o)
+
+    # -- quantized inference: one calibrate+quantize, two lowering paths ----
+    n = x.shape[0]
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    aq = calibrate_minmax(xp, cfg.a_bits)
+    qx = quantize(xp, aq)          # float-zero padding becomes its Eq. 2 code
+    hp, wp = xp.shape[1], xp.shape[2]
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw) // stride + 1
+    if not packed:
+        # At-use sharding for float masters (as the old im2col->pim_linear
+        # path applied); prepacked weights keep their packing-time layout.
+        w = _constrain_weight(w.reshape(kh * kw * c, o), "io").reshape(w.shape)
+        w = prepack_conv(w, cfg.w_bits)
+
+    if conv_mode not in ("auto", "fused", "im2col"):
+        raise ValueError(f"conv_mode {conv_mode!r}: want auto|fused|im2col")
+    fused = {"fused": True, "im2col": False}.get(
+        conv_mode, fuse_conv_heuristic(n, oh, ow, kh, kw, c, cfg.backend))
+    if fused:
+        from repro.kernels import ops as _kops
+
+        p = _kops.conv2d_bitserial(qx, w.fused_planes, a_bits=cfg.a_bits,
+                                   stride=stride)
+    else:
+        qcols, _, _ = _im2col(qx, kh, kw, stride, 0)
+        p = int_matmul_prepacked(qcols, w.mat, cfg.a_bits, cfg.backend)
+        p = p.reshape(n, oh, ow, o)
+    # Patch-wise activation code sums for the affine correction: a strided
+    # box sum over the per-pixel channel sums — no patch matrix needed.
+    sa = jax.lax.reduce_window(
+        qx.sum(-1), jnp.int32(0), jax.lax.add, (1, kh, kw),
+        (1, stride, stride), "VALID")
+    y = affine_correction(p, sa[..., None], w.mat.col_sums, kh * kw * c,
+                          aq, w.wq).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
 
 
 def prepack_weights(w: jax.Array, cfg: PIMQuantConfig):
-    """Deployment helper: quantize weights once (paper: program subarrays once).
+    """Legacy deployment helper: quantize weights once.
 
     Returns (codes, QuantParams) for reuse with
-    ``bitserial.quantized_matmul(..., wq=wq, qw=codes)``.
+    ``bitserial.quantized_matmul(..., wq=wq, qw=codes)``. New code should
+    use :func:`prepack_linear`/:func:`prepack_conv2d`, which also pack the
+    bit-planes and precompute the correction sums.
     """
     wq = calibrate_minmax(w, cfg.w_bits)
     return quantize(w, wq), wq

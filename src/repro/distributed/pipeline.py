@@ -22,6 +22,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# jax.shard_map / jax.lax.pvary landed after 0.4.x; fall back to the
+# experimental shard_map (whose replication checker predates vma typing —
+# disable it, the ppermute/psum pattern below is device-varying by design).
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
 
 def pipeline_forward(stage_params, x_microbatches, stage_fn, mesh,
                      stage_axis: str = "stage"):
@@ -44,8 +58,8 @@ def pipeline_forward(stage_params, x_microbatches, stage_fn, mesh,
         mb_shape = xs.shape[1:]
         # carries become device-varying inside the loop (ppermute/axis_index)
         # — mark the initial values as varying for shard_map's vma typing.
-        outputs = jax.lax.pvary(jnp.zeros_like(xs), (stage_axis,))
-        carry_in = jax.lax.pvary(jnp.zeros(mb_shape, xs.dtype), (stage_axis,))
+        outputs = _pvary(jnp.zeros_like(xs), (stage_axis,))
+        carry_in = _pvary(jnp.zeros(mb_shape, xs.dtype), (stage_axis,))
 
         def tick(t, state):
             outputs, carry_in = state
@@ -71,8 +85,8 @@ def pipeline_forward(stage_params, x_microbatches, stage_fn, mesh,
         outputs = jnp.where(stage_id == n_stages - 1, outputs, 0.0)
         return jax.lax.psum(outputs, stage_axis)
 
-    return jax.shard_map(
-        per_stage, mesh=mesh,
+    return _shard_map(
+        per_stage, mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),
     )(stage_params, x_microbatches)

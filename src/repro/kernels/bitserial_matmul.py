@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the paper's Eq. 1 bit-serial matmul.
+"""Pallas TPU kernels for the paper's Eq. 1 bit-serial matmul.
 
 Computes ``P[b, o] = sum_{n,m} 2^(n+m) * popcount(pa[n, b, :] & pw[m, o, :])``
 over packed uint32 bit-planes — the NAND-SPIN subarray dataflow mapped onto
@@ -17,11 +17,27 @@ block stays resident in VMEM while partial popcounts accumulate — partial
 sums never round-trip to HBM, which is exactly the property the paper's
 cross-writing scheme buys on NAND-SPIN.
 
+Two entry points:
+
+``bitserial_matmul_packed``  both operands pre-packed (a_bits/w_bits, ·, KW)
+                             uint32 planes.
+``bitserial_matmul_fused``   activations arrive as raw integer *codes*; the
+                             kernel bit-slices and lane-packs each K tile in
+                             VMEM before the AND+popcount loop, so
+                             quantize->pack->popcount is ONE ``pallas_call``
+                             and the packed activation planes never
+                             round-trip through HBM. Weight planes arrive
+                             prepacked (see ``repro.core.packed`` — the
+                             paper's program-subarrays-once step).
+
 The (bm, chunk, bkw) broadcast intermediate is tiled by an inner fori_loop
 over output-column chunks of 128 lanes to bound VREG/VMEM pressure
-(`_OC` below); the MXU is idle in this kernel by design — Eq. 1 is a pure
-VPU bit-op pipeline. See ``mxu_plane`` in :mod:`repro.core.bitserial` for
-the systolic alternative, and DESIGN.md §2 for the trade-off experiment.
+(`_OC` below); tiles whose ``bn`` is not a multiple of 128 fall back to an
+unchunked accumulation (previously they silently computed only the first
+``bn // 128`` lane groups — see tests/test_kernels.py regression). The MXU
+is idle in these kernels by design — Eq. 1 is a pure VPU bit-op pipeline.
+See ``mxu_plane`` in :mod:`repro.core.bitserial` for the systolic
+alternative, and DESIGN.md §2 for the trade-off experiment.
 """
 from __future__ import annotations
 
@@ -35,6 +51,35 @@ from jax.experimental import pallas as pl
 _OC = 128
 
 
+def _accumulate(planes, w_ref, o_ref, *, a_bits: int, w_bits: int, bm: int,
+                bn: int, bkw: int):
+    """Shared Eq. 1 accumulation: planes[n] is the (bm, bkw) uint32 plane."""
+    if bn % _OC:
+        # Narrow / non-lane-multiple outputs: no column chunking.
+        acc = jnp.zeros((bm, bn), jnp.int32)
+        for n in range(a_bits):
+            a = planes[n]
+            for m in range(w_bits):
+                cnt = jax.lax.population_count(a[:, None, :] & w_ref[m][None, :, :])
+                acc += cnt.sum(-1).astype(jnp.int32) << (n + m)
+    else:
+        def oc_body(c, acc):
+            # acc: (bm, bn) int32. Process output columns [c*_OC, (c+1)*_OC).
+            partial = jnp.zeros((bm, _OC), jnp.int32)
+            for n in range(a_bits):          # static unroll: plane pairs
+                a = planes[n]                # (bm, bkw) uint32
+                for m in range(w_bits):
+                    w = jax.lax.dynamic_slice(w_ref[m], (c * _OC, 0), (_OC, bkw))
+                    # sense-amp AND + per-column bitcount, 32 cells per lane
+                    cnt = jax.lax.population_count(a[:, None, :] & w[None, :, :])
+                    partial += cnt.sum(-1).astype(jnp.int32) << (n + m)
+            return jax.lax.dynamic_update_slice(acc, partial, (0, c * _OC))
+
+        acc = jax.lax.fori_loop(0, bn // _OC, oc_body,
+                                jnp.zeros((bm, bn), jnp.int32))
+    o_ref[...] += acc
+
+
 def _kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int, bm: int, bn: int,
             bkw: int):
     # Zero the accumulator tile on the first K step (grid axis 2 innermost).
@@ -42,20 +87,31 @@ def _kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int, bm: int, bn: int,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    def oc_body(c, acc):
-        # acc: (bm, bn) int32. Process output columns [c*_OC, (c+1)*_OC).
-        partial = jnp.zeros((bm, _OC), jnp.int32)
-        for n in range(a_bits):          # static unroll: plane pairs
-            a = a_ref[n]                 # (bm, bkw) uint32
-            for m in range(w_bits):
-                w = jax.lax.dynamic_slice(w_ref[m], (c * _OC, 0), (_OC, bkw))
-                # sense-amp AND + per-column bitcount, 32 cells per lane
-                cnt = jax.lax.population_count(a[:, None, :] & w[None, :, :])
-                partial += cnt.sum(-1).astype(jnp.int32) << (n + m)
-        return jax.lax.dynamic_update_slice(acc, partial, (0, c * _OC))
+    planes = [a_ref[n] for n in range(a_bits)]
+    _accumulate(planes, w_ref, o_ref, a_bits=a_bits, w_bits=w_bits, bm=bm,
+                bn=bn, bkw=bkw)
 
-    acc = jax.lax.fori_loop(0, bn // _OC, oc_body, jnp.zeros((bm, bn), jnp.int32))
-    o_ref[...] += acc
+
+def _fused_kernel(qa_ref, w_ref, o_ref, *, a_bits: int, w_bits: int, bm: int,
+                  bn: int, bkw: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Bit-slice + lane-pack the activation K tile in VMEM: the packed planes
+    # are kernel-local, never written to HBM (vs. the 3-launch pipeline).
+    q = qa_ref[...].astype(jnp.uint32).reshape(bm, bkw, 32)
+    lane_w = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, None, :]
+    planes = [(((q >> jnp.uint32(n)) & jnp.uint32(1)) * lane_w).sum(
+        -1, dtype=jnp.uint32) for n in range(a_bits)]
+    _accumulate(planes, w_ref, o_ref, a_bits=a_bits, w_bits=w_bits, bm=bm,
+                bn=bn, bkw=bkw)
+
+
+def _check_blocks(m, n, kw, bm, bn, bkw):
+    if m % bm or n % bn or kw % bkw:
+        raise ValueError(
+            f"shape ({m},{n},{kw}) not divisible by blocks ({bm},{bn},{bkw})")
 
 
 @functools.partial(
@@ -78,19 +134,12 @@ def bitserial_matmul_packed(
     bm = min(bm, m)
     bn = min(bn, n)
     bkw = min(bkw, kw)
-    if m % bm or n % bn or kw % bkw or bn % _OC and bn != n:
-        raise ValueError(f"shape ({m},{n},{kw}) not divisible by blocks ({bm},{bn},{bkw})")
-    oc = min(_OC, bn)
+    _check_blocks(m, n, kw, bm, bn, bkw)
 
     grid = (m // bm, n // bn, kw // bkw)
     kern = functools.partial(
         _kernel, a_bits=a_bits, w_bits=w_bits, bm=bm, bn=bn, bkw=bkw
     )
-    # small-N fallback for the inner chunking
-    if oc != _OC:
-        kern = functools.partial(
-            _small_kernel, a_bits=a_bits, w_bits=w_bits
-        )
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -104,17 +153,42 @@ def bitserial_matmul_packed(
     )(pa, pw)
 
 
-def _small_kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int):
-    """Variant without output-column chunking for narrow outputs."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+@functools.partial(
+    jax.jit, static_argnames=("a_bits", "w_bits", "bm", "bn", "bkw", "interpret")
+)
+def bitserial_matmul_fused(
+    qa: jax.Array,  # (M, K) int32 activation codes, K % 32 == 0
+    pw: jax.Array,  # (w_bits, N, K//32) uint32 prepacked weight planes
+    *,
+    a_bits: int,
+    w_bits: int,
+    bm: int = 128,
+    bn: int = 128,
+    bkw: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused pack+matmul: activation codes in, (M, N) int32 out, one launch."""
+    m, k = qa.shape
+    _, n, kw = pw.shape
+    if k != kw * 32:
+        raise ValueError(f"K={k} does not match packed weight KW={kw}")
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bkw = min(bkw, kw)
+    _check_blocks(m, n, kw, bm, bn, bkw)
 
-    acc = jnp.zeros(o_ref.shape, jnp.int32)
-    for n in range(a_bits):
-        a = a_ref[n]
-        for m in range(w_bits):
-            w = w_ref[m]
-            cnt = jax.lax.population_count(a[:, None, :] & w[None, :, :])
-            acc += cnt.sum(-1).astype(jnp.int32) << (n + m)
-    o_ref[...] += acc
+    grid = (m // bm, n // bn, kw // bkw)
+    kern = functools.partial(
+        _fused_kernel, a_bits=a_bits, w_bits=w_bits, bm=bm, bn=bn, bkw=bkw
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bkw * 32), lambda i, j, k: (i, k)),
+            pl.BlockSpec((w_bits, bn, bkw), lambda i, j, k: (0, j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(qa, pw)

@@ -1,0 +1,102 @@
+"""Pallas kernel: fused implicit-im2col bit-serial convolution.
+
+The materialized conv lowering builds the (N*OH*OW, KH*KW*C) patch matrix in
+HBM — a KH*KW-fold blow-up of the activation that the paper's architecture
+never pays: NAND-SPIN slides the weight buffer over *resident* input planes
+(Fig. 8's row-activation schedule). This kernel reproduces that property on
+TPU: the grid's K axis walks the KH kernel-row offsets, and each grid step
+streams exactly one padded input row per activation plane from HBM; the KW
+offsets are walked *inside* the kernel with strided VMEM slices. No patch
+matrix ever exists in any memory space.
+
+Layouts (built by :func:`repro.kernels.ops.conv2d_bitserial`):
+
+  pa  (a_bits, N*Hp, Wp, CW) uint32 — activation codes packed along C
+      (CW = ceil(C/32) words); spatial padding applied beforehand with the
+      code of float zero, so patches match the materialized path bit-exactly.
+  pw  (KH, w_bits, O, KW, CW) uint32 — per-kernel-row weight planes
+      (``PackedConvWeight.fused_planes``).
+  out (N*OH, OW, O) int32 — P tiles; the (OW, bo) accumulator stays in VMEM
+      across the KH grid axis (cross-writing, as in the matmul kernel).
+
+Grid = (N*OH, O//bo, KH) with KH innermost. The activation BlockSpec uses a
+size-1 block on the row axis, so the index map addresses the *element* row
+(n*Hp + oh*stride + kh) directly — that arithmetic is the whole implicit
+im2col.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int, kw_sz: int,
+            ow: int, stride: int, cw: int, bo: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.zeros((ow, bo), jnp.int32)
+    for n in range(a_bits):
+        row = a_ref[n, 0]                          # (Wp, CW) one padded row
+        for dx in range(kw_sz):                    # implicit im2col: KW walk
+            # Output positions ow_i read words [dx + ow_i*stride] of the row.
+            asl = jax.lax.slice(row, (dx, 0),
+                                (dx + (ow - 1) * stride + 1, cw),
+                                (stride, 1))       # (ow, CW)
+            for m in range(w_bits):
+                wv = w_ref[0, m, :, dx, :]         # (bo, CW)
+                cnt = jax.lax.population_count(asl[:, None, :] & wv[None, :, :])
+                acc += cnt.sum(-1).astype(jnp.int32) << (n + m)
+    o_ref[0] += acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "hp", "oh", "ow", "stride", "bo", "interpret"))
+def conv2d_bitserial_fused(
+    pa: jax.Array,  # (a_bits, N*Hp, Wp, CW) uint32 packed activation planes
+    pw: jax.Array,  # (KH, w_bits, O, KW, CW) uint32 packed weight planes
+    *,
+    n: int,
+    hp: int,
+    oh: int,
+    ow: int,
+    stride: int = 1,
+    bo: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused bit-serial conv -> P (N, OH, OW, O) int32 (integer part of Eq. 1)."""
+    a_bits, rows, wp, cw = pa.shape
+    kh, w_bits, o, kw_sz, _ = pw.shape
+    if rows != n * hp:
+        raise ValueError(f"pa rows {rows} != n*hp {n * hp}")
+    if wp < (ow - 1) * stride + kw_sz:
+        raise ValueError(f"padded width {wp} too small for ow={ow}")
+    bo = min(bo, o)
+    while o % bo:
+        bo -= 1
+
+    grid = (n * oh, o // bo, kh)
+    kern = functools.partial(_kernel, a_bits=a_bits, w_bits=w_bits,
+                             kw_sz=kw_sz, ow=ow, stride=stride, cw=cw, bo=bo)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            # Element-addressed row (block size 1 on the row axis):
+            # row = n*Hp + oh*stride + kh — the implicit im2col index.
+            pl.BlockSpec(
+                (a_bits, 1, wp, cw),
+                lambda i, j, k: (0, (i // oh) * hp + (i % oh) * stride + k, 0, 0),
+            ),
+            pl.BlockSpec((1, w_bits, bo, kw_sz, cw),
+                         lambda i, j, k: (k, 0, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ow, bo), lambda i, j, k: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n * oh, ow, o), jnp.int32),
+        interpret=interpret,
+    )(pa, pw)
+    return out.reshape(n, oh, ow, o)

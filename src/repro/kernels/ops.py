@@ -3,6 +3,13 @@
 On a TPU backend the kernels run compiled; on CPU (this container) they run
 in ``interpret=True`` mode, which executes the kernel body in Python with
 identical semantics — that is how correctness is validated here.
+
+``bitserial_matmul`` is ONE kernel launch when the weight planes arrive
+prepacked (``pw=``, from :class:`repro.core.packed.PackedWeight`): the
+activation codes are bit-sliced and lane-packed inside the matmul kernel's
+K-tile loop, so no packed plane ever round-trips through HBM. With raw
+weight codes it is two launches (weight pack + fused matmul) — still down
+from the historical three (pack A, pack W, matmul).
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ from repro.core.mapping import plan_matmul
 
 from . import bitplane_pack as _pack
 from . import bitserial_matmul as _bsm
+from . import conv2d_fused as _conv
 
 
 def _interpret_default() -> bool:
@@ -38,29 +46,73 @@ def pack_planes(q: jax.Array, bits: int, interpret: bool | None = None) -> jax.A
 
 
 def bitserial_matmul(
-    qa: jax.Array,  # (M, K) int codes
-    qw: jax.Array,  # (K, N) int codes
+    qa: jax.Array,            # (M, K) int codes
+    qw: jax.Array | None = None,  # (K, N) int codes (omit when pw given)
     *,
     a_bits: int,
     w_bits: int,
+    pw: jax.Array | None = None,  # (w_bits, N, ceil32(K)/32) prepacked planes
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Eq. 1 bit-serial integer matmul via the Pallas kernels -> (M, N) i32."""
+    """Eq. 1 bit-serial integer matmul via the Pallas kernels -> (M, N) i32.
+
+    Activation packing is fused into the matmul kernel; pass ``pw`` (the
+    prepacked weight planes of a ``PackedWeight``) to make the whole product
+    a single ``pallas_call``.
+    """
     if interpret is None:
         interpret = _interpret_default()
     m, k = qa.shape
-    _, n = qw.shape
-    pa = pack_planes(qa, a_bits, interpret)
-    pw = pack_planes(qw.T, w_bits, interpret)
-    kw = pa.shape[-1]
+    if pw is None:
+        if qw is None:
+            raise ValueError("need either qw codes or pw prepacked planes")
+        pw = pack_planes(qw.T, w_bits, interpret)
+    n = pw.shape[1]
+    kw = pw.shape[-1]
+    if k > kw * 32:
+        raise ValueError(
+            f"activation K={k} exceeds packed weight K={kw * 32} words*32")
+    if kw * 32 != k:
+        qa = jnp.pad(qa, ((0, 0), (0, kw * 32 - k)))
     plan = plan_matmul(m, k, n, a_bits, w_bits)
     bm = _divisor_block(m, plan.bm)
     bn = _divisor_block(n, plan.bn)
     bkw = _divisor_block(kw, plan.bk_words)
-    return _bsm.bitserial_matmul_packed(
-        pa, pw, a_bits=a_bits, w_bits=w_bits, bm=bm, bn=bn, bkw=bkw,
+    return _bsm.bitserial_matmul_fused(
+        qa, pw, a_bits=a_bits, w_bits=w_bits, bm=bm, bn=bn, bkw=bkw,
         interpret=interpret,
     )
+
+
+def conv2d_bitserial(
+    qx: jax.Array,   # (N, Hp, Wp, C) int32 activation codes, spatially padded
+    pw: jax.Array,   # (KH, w_bits, O, KW, CW) PackedConvWeight.fused_planes
+    *,
+    a_bits: int,
+    stride: int = 1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Implicit-im2col bit-serial conv -> P (N, OH, OW, O) int32.
+
+    Packs the channel axis of the already-padded activation codes and runs
+    the fused kernel; the (N*OH*OW, KH*KW*C) patch matrix is never built.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n, hp, wp, c = qx.shape
+    kh, _, _, kw_sz, cw = pw.shape
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw_sz) // stride + 1
+    # Channel pack through the Pallas pack kernel: block-tiled in VMEM, so
+    # no full-size (a_bits, N, Hp, Wp, C) bit-plane broadcast ever exists —
+    # the XLA slice_and_pack would allocate one as large as the im2col
+    # matrix itself (see tests/test_fastpath.py jaxpr assertion).
+    pa = pack_planes(qx.reshape(n * hp * wp, c), a_bits, interpret)
+    if pa.shape[-1] != cw:
+        raise ValueError(f"channel words {pa.shape[-1]} != weight words {cw}")
+    pa = pa.reshape(a_bits, n * hp, wp, cw)
+    return _conv.conv2d_bitserial_fused(
+        pa, pw, n=n, hp=hp, oh=oh, ow=ow, stride=stride, interpret=interpret)
 
 
 def _divisor_block(dim: int, want: int) -> int:

@@ -2,6 +2,7 @@
 
 Each model exposes:
   init(key, num_classes)   -> param pytree
+  prepack(params, cfg)     -> same tree, weights quantized+packed once
   apply(params, x, cfg)    -> logits (cfg: PIMQuantConfig | None)
   layer_specs(hw, batch)   -> list[GemmSpec] consumed by the PIM simulator
 """

@@ -43,6 +43,11 @@ def init(key, num_classes=1000, image=224):
     return params
 
 
+def prepack(params, cfg):
+    """Deployment: quantize+pack every weight once (program subarrays once)."""
+    return L.prepack_params(params, cfg)
+
+
 def apply(params, x, cfg=None, train=False):
     for name, _, _, s, p, pool in _CONVS:
         x = L.conv_block(params[name], x, stride=s, padding=p, cfg=cfg, train=train)

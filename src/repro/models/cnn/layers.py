@@ -10,7 +10,41 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import PIMQuantConfig, fold_batchnorm, pim_conv2d, pim_linear
+from repro.core import (
+    PIMQuantConfig,
+    fold_batchnorm,
+    pim_conv2d,
+    pim_linear,
+    prepack_conv2d,
+    prepack_linear,
+)
+
+
+def prepack_params(params, cfg: PIMQuantConfig):
+    """Quantize + pack every conv/fc weight in a CNN param tree exactly once.
+
+    The paper's deployment step: subarrays are programmed once, then every
+    inference only streams activations. Replaces each ``"w"`` leaf with a
+    :class:`PackedWeight`/:class:`PackedConvWeight`; biases and folded-BN
+    params pass through untouched. ``conv_block``/``fc_block`` consume the
+    prepacked tree unchanged.
+    """
+    if cfg is None or not cfg.enabled:
+        return params
+
+    def walk(p):
+        if isinstance(p, dict):
+            out = {}
+            for k, v in p.items():
+                if k == "w" and hasattr(v, "ndim"):
+                    out[k] = (prepack_conv2d(v, cfg) if v.ndim == 4
+                              else prepack_linear(v, cfg))
+                else:
+                    out[k] = walk(v)
+            return out
+        return p
+
+    return walk(params)
 
 
 def init_conv(key, k, cin, cout, bn=True):

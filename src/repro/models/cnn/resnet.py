@@ -32,6 +32,11 @@ def init(key, num_classes=1000, image=224):
     return params
 
 
+def prepack(params, cfg):
+    """Deployment: quantize+pack every weight once (program subarrays once)."""
+    return L.prepack_params(params, cfg)
+
+
 def _bottleneck(p, x, stride, cfg, train):
     y = L.conv_block(p["c1"], x, 1, 0, cfg=cfg, train=train)
     y = L.conv_block(p["c2"], y, stride, 1, cfg=cfg, train=train)

@@ -33,6 +33,11 @@ def init(key, num_classes=1000, image=224):
     return params
 
 
+def prepack(params, cfg):
+    """Deployment: quantize+pack every weight once (program subarrays once)."""
+    return L.prepack_params(params, cfg)
+
+
 def apply(params, x, cfg=None, train=False):
     for s, (cout, reps) in enumerate(_STAGES):
         for i in range(reps):

@@ -10,9 +10,11 @@ from .model import (
     loss_fn,
     param_count,
     prefill,
+    prepack_params,
 )
 
 __all__ = [
     "ModelConfig", "MoEConfig", "abstract_params", "decode_step", "forward",
     "init", "init_state", "layer_plan", "loss_fn", "param_count", "prefill",
+    "prepack_params",
 ]

@@ -185,6 +185,58 @@ def cast_params(params, dtype):
     return jax.tree.map(_cast, params)
 
 
+# Projection leaves that route through pim_linear — the prepack targets.
+# (embed / tied heads stay float: the embedding gather is not a GEMM.)
+_PIM_PROJ_KEYS = frozenset({
+    "wq", "wk", "wv", "wo",                      # attention
+    "w_in", "w_out", "w_gate",                   # mlp / rglru
+    "w_x",                                       # rglru input proj
+    "w_r", "w_k", "w_v", "w_g", "w_o",           # rwkv6
+    "head",                                      # untied lm head
+})
+
+
+def prepack_params(params, cfg):
+    """Quantize + pack every pim_linear projection weight exactly once.
+
+    The serving-time analog of the paper's subarray programming: after this,
+    repeated ``decode_step``/``prefill`` calls never re-calibrate, re-quantize
+    or re-pack a weight. Scan-stacked leaves (R, K, N) prepack under ``vmap``
+    so the layer scan slices per-rep :class:`PackedWeight` pytrees exactly as
+    it slices raw arrays. Left as floats: tied embeddings (the lm_head reuses
+    the embedding matrix, whose primary role is the token gather) and MoE
+    expert banks (``moe_ffn`` contracts them via batched einsum, not
+    ``pim_linear`` — their (E, d, f) shape collides with the stacked-MLP key
+    names, so the whole router-bearing dict is excluded).
+    """
+    from repro.core.packed import prepack
+
+    if cfg is None or not getattr(cfg, "enabled", False):
+        return params
+
+    def pack_leaf(leaf):
+        fn = functools.partial(prepack, w_bits=cfg.w_bits)
+        if leaf.ndim == 3:               # scan-stacked (R, K, N)
+            fn = jax.vmap(fn)
+        return fn(leaf.astype(jnp.float32))
+
+    def walk(p):
+        if isinstance(p, dict):
+            if "router" in p:            # MoE expert bank: einsum consumers
+                return p
+            return {k: (pack_leaf(v)
+                        if (k in _PIM_PROJ_KEYS and hasattr(v, "ndim")
+                            and v.ndim in (2, 3)
+                            and jnp.issubdtype(v.dtype, jnp.floating))
+                        else walk(v))
+                    for k, v in p.items()}
+        if isinstance(p, (list, tuple)):
+            return type(p)(walk(v) for v in p)
+        return p
+
+    return walk(params)
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

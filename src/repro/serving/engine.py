@@ -18,6 +18,11 @@ TPU program wants.
 Fault tolerance: the engine state is a pytree; ``snapshot``/``restore``
 round-trips it through the checkpoint module, so a preempted server resumes
 mid-generation.
+
+PIM deployment: when ``cfg.pim`` is enabled the constructor prepacks every
+projection weight into :class:`repro.core.packed.PackedWeight` — the
+paper's program-subarrays-once step — so prefill/decode never re-calibrate,
+re-quantize or re-pack a weight (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -28,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.lm import decode_step, init_state, prefill
+from repro.models.lm import decode_step, init_state, prefill, prepack_params
 from repro.models.lm.config import ModelConfig
 
 from .sampler import SamplerConfig, sample
@@ -52,7 +57,10 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_len: int = 512, sampler: SamplerConfig | None = None):
         self.cfg = cfg
-        self.params = params
+        # Deployment-time weight quantize+pack, exactly once (the paper
+        # programs subarrays once): every prefill/decode after this reuses
+        # the PackedWeight planes — no per-call re-calibration or re-pack.
+        self.params = prepack_params(params, cfg.pim)
         self.max_batch = max_batch
         self.max_len = max_len
         self.sampler = sampler or SamplerConfig()

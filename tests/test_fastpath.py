@@ -1,0 +1,259 @@
+"""The cached/fused inference fast path (DESIGN.md §3).
+
+Covers the acceptance criteria of the prepack/fusion PR:
+  * PackedWeight round-trips bit-exactly vs the int-direct oracle on every
+    backend, including the single-launch fused Pallas kernel;
+  * the fused implicit-im2col conv agrees with lax.conv_general_dilated
+    (within quantization error) and with the materialized im2col path
+    bit-exactly across stride/padding;
+  * the fused conv never materializes the (N*OH*OW, KH*KW*C) patch matrix
+    (jaxpr inspection);
+  * repeated serving calls neither recompile nor re-quantize/re-pack the
+    weights.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PackedConvWeight,
+    PackedWeight,
+    PIMQuantConfig,
+    fuse_conv_heuristic,
+    pim_conv2d,
+    pim_linear,
+    prepack_conv2d,
+    prepack_linear,
+    quantized_matmul,
+)
+from repro.core.bitserial import int_matmul_direct, int_matmul_prepacked
+
+ALL_BACKENDS = ("int-direct", "mxu-plane", "popcount", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# PackedWeight matmul fast path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("ab,wb", [(8, 8), (4, 2)])
+def test_packed_weight_bit_exact_vs_int_direct(backend, ab, wb):
+    """P through the prepacked planes == the oracle on the same codes."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (96, 40))
+    pk = prepack_linear(w, PIMQuantConfig(w_bits=wb, a_bits=ab))
+    qa = jax.random.randint(jax.random.PRNGKey(1), (6, 96), 0, 2**ab)
+    got = int_matmul_prepacked(qa, pk, ab, backend)
+    want = int_matmul_direct(qa, pk.codes)
+    assert got.dtype == jnp.int32
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_packed_weight_matches_per_call_quantized_matmul(backend):
+    """Deployment path (prepack once) == seed path (quantize every call)."""
+    a = jax.random.normal(jax.random.PRNGKey(2), (5, 160))
+    w = jax.random.normal(jax.random.PRNGKey(3), (160, 24))
+    cfg = PIMQuantConfig(w_bits=8, a_bits=8, backend=backend)
+    pk = prepack_linear(w, cfg)
+    y_cached = pim_linear(a, pk, cfg=cfg)
+    y_percall = pim_linear(a, w, cfg=cfg)
+    assert jnp.array_equal(y_cached, y_percall)
+
+
+def test_packed_weight_col_sums_and_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(4), (70, 12))
+    pk = prepack_linear(w, PIMQuantConfig(w_bits=8, a_bits=8))
+    assert (pk.col_sums == pk.codes.sum(0)).all()
+    # dequantized master within one quantization step of the original
+    assert float(jnp.abs(pk.to_float() - w).max()) <= float(pk.wq.scale)
+
+
+def test_packed_weight_is_a_pytree():
+    """PackedWeight jits, vmaps and scans like any parameter leaf."""
+    w = jax.random.normal(jax.random.PRNGKey(5), (3, 64, 16))  # stacked reps
+    from functools import partial
+
+    from repro.core.packed import prepack
+
+    pk = jax.vmap(partial(prepack, w_bits=8))(w)
+    assert pk.codes.shape == (3, 64, 16)
+    for r in range(3):
+        ref = prepack(w[r], 8)
+        sl = jax.tree.map(lambda l: l[r], pk)
+        assert (sl.codes == ref.codes).all()
+        assert (sl.planes == ref.planes).all()
+
+
+# ---------------------------------------------------------------------------
+# Fused implicit-im2col conv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride,padding", [(1, 0), (1, 1), (2, 1), (2, 0),
+                                            (1, 2)])
+def test_fused_conv_matches_materialized_bit_exact(stride, padding):
+    """Same codes through both lowerings -> identical outputs, any geometry."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 9, 9, 33))  # odd C: pad
+    w = jax.random.normal(jax.random.PRNGKey(7), (3, 3, 33, 16)) * 0.2
+    cfg = PIMQuantConfig(w_bits=8, a_bits=8, backend="pallas")
+    pk = prepack_conv2d(w, cfg)
+    y_fused = pim_conv2d(x, pk, stride=stride, padding=padding, cfg=cfg,
+                         conv_mode="fused")
+    cfg_i = PIMQuantConfig(w_bits=8, a_bits=8, backend="int-direct")
+    y_mat = pim_conv2d(x, pk, stride=stride, padding=padding, cfg=cfg_i,
+                       conv_mode="im2col")
+    assert jnp.array_equal(y_fused, y_mat)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, 1), (2, 1)])
+def test_fused_conv_tracks_lax_conv(stride, padding):
+    """8-bit fused conv stays within quantization error of the float conv."""
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 10, 10, 32))
+    w = jax.random.normal(jax.random.PRNGKey(9), (3, 3, 32, 16)) * 0.1
+    cfg = PIMQuantConfig(w_bits=8, a_bits=8, backend="pallas")
+    y = pim_conv2d(x, prepack_conv2d(w, cfg), stride=stride, padding=padding,
+                   cfg=cfg, conv_mode="fused")
+    ref = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert y.shape == ref.shape
+    scale = float(jnp.abs(ref).max())
+    assert float(jnp.abs(y - ref).max()) <= 0.05 * scale + 1e-3
+
+
+def _jaxpr_avals(jaxpr):
+    """All intermediate avals, recursing into sub-jaxprs (pjit/scan/pallas)."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                yield v.aval
+        for val in eqn.params.values():
+            inner = getattr(val, "jaxpr", None)
+            if inner is not None:
+                yield from _jaxpr_avals(inner)
+
+
+def test_fused_conv_never_materializes_patch_matrix():
+    """No intermediate anywhere in the jaxpr is as large as the im2col
+    matrix — the defining property of the implicit-im2col kernel."""
+    n, h, c, o, kk, pad = 2, 16, 32, 16, 3, 1
+    x = jax.random.normal(jax.random.PRNGKey(10), (n, h, h, c))
+    w = jax.random.normal(jax.random.PRNGKey(11), (kk, kk, c, o)) * 0.1
+    cfg = PIMQuantConfig(w_bits=8, a_bits=8, backend="pallas")
+    pk = prepack_conv2d(w, cfg)
+    oh = h + 2 * pad - kk + 1
+    im2col_elems = n * oh * oh * kk * kk * c
+
+    fused = jax.make_jaxpr(lambda xx: pim_conv2d(
+        xx, pk, stride=1, padding=pad, cfg=cfg, conv_mode="fused"))(x)
+    big = [a for a in _jaxpr_avals(fused.jaxpr)
+           if int(np.prod(a.shape)) >= im2col_elems]
+    assert not big, f"fused path materialized {[a.shape for a in big]}"
+
+    # positive control: the materialized path DOES build the patch matrix
+    cfg_i = PIMQuantConfig(w_bits=8, a_bits=8, backend="int-direct")
+    mat = jax.make_jaxpr(lambda xx: pim_conv2d(
+        xx, pk, stride=1, padding=pad, cfg=cfg_i, conv_mode="im2col"))(x)
+    assert any(int(np.prod(a.shape)) >= im2col_elems
+               for a in _jaxpr_avals(mat.jaxpr))
+
+
+def test_fuse_heuristic_dispatch():
+    """auto mode: big maps fuse on the pallas backend, 1x1 and XLA don't."""
+    assert fuse_conv_heuristic(64, 112, 112, 3, 3, 64, "pallas")
+    assert not fuse_conv_heuristic(64, 112, 112, 1, 1, 64, "pallas")
+    assert not fuse_conv_heuristic(64, 112, 112, 3, 3, 64, "int-direct")
+    assert not fuse_conv_heuristic(1, 4, 4, 3, 3, 8, "pallas")  # tiny map
+
+
+# ---------------------------------------------------------------------------
+# Serving: quantize+pack exactly once, no recompilation
+# ---------------------------------------------------------------------------
+
+def test_no_repack_no_recompile_on_repeated_calls(monkeypatch):
+    """After prepack, repeated jitted calls never re-calibrate the weight
+    and never re-trace: the paper's program-subarrays-once property."""
+    from repro.core import bitserial as bs
+
+    w = jax.random.normal(jax.random.PRNGKey(12), (128, 64))
+    cfg = PIMQuantConfig(w_bits=8, a_bits=8, backend="popcount")
+    pk = prepack_linear(w, cfg)
+
+    seen = []
+    orig = bs.calibrate_minmax
+    monkeypatch.setattr(bs, "calibrate_minmax",
+                        lambda x, bits, **kw: (seen.append(x.shape),
+                                               orig(x, bits, **kw))[1])
+    step = jax.jit(lambda x: pim_linear(x, pk, cfg=cfg))
+    for i in range(4):
+        step(jax.random.normal(jax.random.PRNGKey(i), (8, 128))).block_until_ready()
+    # Traced once (one activation-side calibration), zero weight-side ones.
+    assert step._cache_size() == 1
+    assert seen == [(8, 128)]
+
+
+def test_engine_prepacks_weights_once():
+    """ServeEngine with a pim config serves from PackedWeight params and
+    matches the whole-sequence prepacked forward greedily."""
+    from repro.models.lm import ModelConfig, forward, init, prepack_params
+    from repro.serving import Request, SamplerConfig, ServeEngine
+
+    pim = PIMQuantConfig(w_bits=8, a_bits=8, backend="int-direct")
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                      d_ff=64, vocab=41, remat="none", dtype="float32",
+                      pim=pim)
+    params = init(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                      sampler=SamplerConfig(temperature=0.0))
+    # the engine's param tree holds PackedWeight leaves, not float masters
+    leaves = jax.tree.leaves(eng.params, is_leaf=lambda l: isinstance(l, PackedWeight))
+    assert any(isinstance(l, PackedWeight) for l in leaves)
+
+    pk = prepack_params(params, pim)
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    toks = list(prompt)
+    for _ in range(5):
+        lg, _ = forward(pk, cfg, jnp.asarray([toks], jnp.int32))
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    done = eng.run()
+    assert done[0].tokens == toks[len(prompt):]
+    # repeated decode steps reuse the single compiled program
+    assert eng._decode._cache_size() == 1
+
+
+def test_prepack_skips_moe_expert_banks():
+    """Regression: MoE expert weights (E, d, f) share key names with
+    scan-stacked MLP weights but are consumed via einsum, not pim_linear —
+    prepacking them crashed forward for MoE models with remainder layers."""
+    from repro.models.lm import ModelConfig, MoEConfig, forward, init, prepack_params
+
+    pim = PIMQuantConfig(w_bits=8, a_bits=8, backend="int-direct")
+    # 8x attn + rglru: the scan unit caps at 8 blocks, so the 9th layer
+    # lands in "rest" with its raw (E, d, f) MoE expert bank.
+    cfg = ModelConfig(n_layers=9, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab=31, remat="none", dtype="float32",
+                      family="moe", moe=MoEConfig(n_experts=4, top_k=2),
+                      block_pattern=("attn",) * 8 + ("rglru",),
+                      pim=pim)
+    params = init(cfg, jax.random.PRNGKey(0))
+    pk = prepack_params(params, pim)
+    rest_ffn = pk["rest"][0]["ffn"]
+    assert not isinstance(rest_ffn["w_in"], PackedWeight)  # stays float
+    assert isinstance(pk["rest"][0]["rglru"]["w_x"], PackedWeight)
+    x = jnp.asarray([[3, 1, 4, 1, 5]], jnp.int32)
+    logits, _ = forward(pk, cfg, x)
+    assert jnp.isfinite(logits).all()
+
+
+def test_cnn_prepack_bit_exact_and_conv_weights_packed():
+    from repro.models.cnn import alexnet
+
+    params = alexnet.init(jax.random.PRNGKey(0), image=64, num_classes=10)
+    cfg = PIMQuantConfig(w_bits=8, a_bits=8, backend="int-direct")
+    pk = alexnet.prepack(params, cfg)
+    assert isinstance(pk["conv1"]["w"], PackedConvWeight)
+    assert isinstance(pk["fc1"]["w"], PackedWeight)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64, 3))
+    assert jnp.array_equal(alexnet.apply(params, x, cfg=cfg),
+                           alexnet.apply(pk, x, cfg=cfg))

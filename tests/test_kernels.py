@@ -43,6 +43,38 @@ def test_kernel_block_shape_sweep(bm, bn, bkw):
     assert (got == want).all()
 
 
+@pytest.mark.parametrize("bn", [192, 320])
+def test_kernel_non_multiple_of_128_bn(bn):
+    """Regression: bn >= 128 but not a multiple of 128 used to take the
+    column-chunked path and silently drop the last bn % 128 output columns
+    (the shape guard's `or ... and` precedence skipped the check)."""
+    m, kw = 8, 2
+    ab = wb = 4
+    pa = jax.random.randint(jax.random.PRNGKey(10), (ab, m, kw), 0, 2**31 - 1,
+                            dtype=jnp.int32).astype(jnp.uint32)
+    pw = jax.random.randint(jax.random.PRNGKey(11), (wb, bn, kw), 0, 2**31 - 1,
+                            dtype=jnp.int32).astype(jnp.uint32)
+    got = bitserial_matmul_packed(pa, pw, a_bits=ab, w_bits=wb,
+                                  bm=m, bn=bn, bkw=kw, interpret=True)
+    want = ref.bitserial_matmul_packed_ref(pa, pw)
+    assert (got == want).all()
+    # the trailing non-multiple columns specifically must be populated
+    assert (got[:, 128:] == want[:, 128:]).all()
+
+
+def test_fused_matmul_single_launch_matches_oracle():
+    """bitserial_matmul with prepacked weight planes == codes oracle."""
+    from repro.core.packed import prepack
+
+    qa = _codes(jax.random.PRNGKey(12), (16, 100), 8)
+    w = jax.random.normal(jax.random.PRNGKey(13), (100, 24))
+    pk = prepack(w, 8)
+    got = ops.bitserial_matmul(qa, a_bits=8, w_bits=8, pw=pk.planes,
+                               interpret=True)
+    want = ref.bitserial_matmul_codes_ref(qa, pk.codes)
+    assert (got == want).all()
+
+
 @pytest.mark.parametrize("m,k,bits", [(8, 32, 1), (64, 128, 8), (256, 4096, 4),
                                       (16, 96, 2)])
 def test_bitplane_pack_kernel(m, k, bits):

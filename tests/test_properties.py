@@ -1,9 +1,14 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional dev dependency (installed in CI); the whole
+module skips cleanly when it is absent so tier-1 collection never breaks."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bitslice
 from repro.core.bitserial import int_matmul_direct, int_matmul_popcount
@@ -33,6 +38,26 @@ def test_pack_is_lossless(bits, k):
     back = sum(bitslice.unpack_bits(planes[b], k).astype(jnp.int32) << b
                for b in range(bits))
     assert (back == q).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(1, 8),
+    lo=st.floats(-100, 99, allow_nan=False),
+    span=st.floats(0.01, 200, allow_nan=False),
+)
+def test_quantize_roundtrip_bound(bits, lo, span):
+    """|dequant(quant(x)) - x| <= scale/2 for x within the calibration range.
+
+    Tolerance includes an f32-cancellation allowance proportional to the
+    offset magnitude ((x - qmin) loses bits when span << |lo|)."""
+    from repro.core.quantize import dequantize as dq
+
+    x = jnp.linspace(lo, lo + span, 97)
+    qp = calibrate_minmax(x, bits)
+    err = jnp.abs(dq(quantize(x, qp), qp) - x)
+    tol = float(qp.scale) / 2 + 1e-5 + 2e-5 * abs(lo)
+    assert float(err.max()) <= tol
 
 
 @settings(max_examples=25, deadline=None)

@@ -23,8 +23,14 @@ from repro.models.lm import abstract_params
 
 def _mesh_stub(shape, names):
     """A Mesh over 1 real device can't have size>1 — use jax.sharding.Mesh
-    abstract construction via AbstractMesh for spec-only tests."""
-    return jax.sharding.AbstractMesh(shape, names)
+    abstract construction via AbstractMesh for spec-only tests.
+
+    AbstractMesh's signature changed across jax versions: 0.4.x takes one
+    ((name, size), ...) shape tuple; >=0.5 takes (sizes, names)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(shape, names)
 
 
 def test_param_specs_dense():
