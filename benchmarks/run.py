@@ -2,13 +2,16 @@
 
 Sections map 1:1 onto the paper's tables/figures (+ the TPU-side roofline
 artifacts). Each renders as an aligned text table. Kernel sections are
-additionally written to ``BENCH_kernels.json`` at the repo root so future
-PRs can track the perf trajectory (cached-weight vs per-call serving,
-fused-conv vs im2col, backend sweep).
+additionally written to ``BENCH_kernels.json`` and the serving section to
+``BENCH_serving.json`` at the repo root so future PRs can track the perf
+trajectory (cached-weight vs per-call serving, fused-conv vs im2col,
+backend sweep, engine hot-loop tokens/sec + TTFT). ``--smoke`` shrinks the
+serving benchmark to CI scale without changing the artifact shape.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import sys
@@ -32,10 +35,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on section names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale serving benchmark (same artifact shape)")
     args = ap.parse_args(argv)
 
-    from . import kernel_bench, lm_roofline, paper_figures
+    from . import kernel_bench, lm_roofline, paper_figures, serve_bench
 
+    serve_throughput = functools.partial(serve_bench.serve_throughput,
+                                         smoke=args.smoke)
     sections = [
         ("fig13a: capacity sweep", paper_figures.fig13a_capacity_sweep),
         ("fig13b: bandwidth sweep", paper_figures.fig13b_bandwidth_sweep),
@@ -54,6 +61,7 @@ def main(argv=None):
         ("roofline: single-pod 16x16 (from dry-run)", lm_roofline.roofline_table),
         ("dry-run: multi-pod 2x16x16 compile status", lm_roofline.multipod_check),
         ("perf: baseline vs optimized step-time bound", lm_roofline.baseline_vs_optimized),
+        ("serve: engine throughput (legacy vs fused hot loop)", serve_throughput),
     ]
     # Kernel sections feeding BENCH_kernels.json (rows reused, not re-run).
     json_keys = {
@@ -63,6 +71,7 @@ def main(argv=None):
         kernel_bench.tile_plan_sweep: "tile_plans",
     }
     payload = {}
+    serve_payload = {}
     t0 = time.time()
     failures = []
     for title, fn in sections:
@@ -73,18 +82,24 @@ def main(argv=None):
             render(title, rows)
             if fn in json_keys:
                 payload[json_keys[fn]] = rows
+            elif fn is serve_throughput:
+                serve_payload["serve_throughput"] = rows
+                serve_payload["smoke"] = args.smoke
         except Exception as e:  # keep the suite running; report at the end
             failures.append((title, repr(e)))
             print(f"\n== {title} FAILED: {e!r}")
-    if payload:
-        path = os.path.join(os.path.dirname(os.path.dirname(
-            os.path.abspath(__file__))), "BENCH_kernels.json")
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for data, name in ((payload, "BENCH_kernels.json"),
+                       (serve_payload, "BENCH_serving.json")):
+        if not data:
+            continue
+        path = os.path.join(repo_root, name)
         try:
             with open(path, "w") as fh:
-                json.dump(payload, fh, indent=1)
+                json.dump(data, fh, indent=1)
             print(f"\nwrote {path}")
         except Exception as e:
-            failures.append(("BENCH_kernels.json", repr(e)))
+            failures.append((name, repr(e)))
 
     print(f"\nbenchmarks done in {time.time() - t0:.1f}s")
     if failures:

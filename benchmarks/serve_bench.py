@@ -1,0 +1,213 @@
+"""Serving throughput benchmark: seed engine hot loop vs the fused one.
+
+``_LegacyEngine`` reproduces the pre-overhaul ``ServeEngine`` faithfully:
+unjitted batch-1 prefill + host-side graft (rebuilds every leaf of the full
+(max_batch, max_len) grid with ``at[].set`` per admission), a jitted decode
+that transfers the full (B, vocab) logits to host every token, eager
+host-side sampling keyed by ``PRNGKey(slot_pos.sum())``, and a per-step
+host->device upload of the position array. The current engine replaces all
+of that with donated in-jit programs (see ``repro/serving/engine.py`` and
+DESIGN.md §4); this module quantifies the difference.
+
+Measured per batch size, same prompt-length mix on both paths:
+  * ``gen_tok_s``  — generated tokens/sec over a full continuous-batching
+    run on a warm engine (compile caches populated by a first run);
+  * ``ttft_ms``    — time-to-first-token for one admission into a warm
+    engine (prompt prefill + first sampled token).
+
+``benchmarks.run --only serve`` renders the table and writes
+``BENCH_serving.json`` at the repo root; ``--smoke`` shrinks the model and
+token counts to CI scale (the artifact shape is identical).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import (
+    ModelConfig, decode_step, init, init_state, prefill, prepack_params,
+)
+from repro.serving import Request, SamplerConfig, ServeEngine
+from repro.serving.sampler import sample
+
+
+class _LegacyEngine:
+    """The seed ``ServeEngine`` hot loop, kept verbatim as the baseline."""
+
+    def __init__(self, cfg, params, max_batch=8, max_len=512, sampler=None):
+        self.cfg = cfg
+        self.params = prepack_params(params, cfg.pim)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sampler = sampler or SamplerConfig()
+        self.state = init_state(cfg, max_batch, max_len)
+        self.slot_req = [None] * max_batch
+        self.slot_remaining = np.zeros(max_batch, np.int32)
+        self.slot_last_tok = np.zeros(max_batch, np.int32)
+        self.queue = []
+        self.done = []
+        self.slot_pos = np.zeros(max_batch, np.int32)
+        self._decode = jax.jit(partial(self._decode_impl, cfg))
+
+    @staticmethod
+    def _decode_impl(cfg, params, tokens, state):
+        return decode_step(params, cfg, tokens, state)
+
+    def submit(self, req):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in [i for i, r in enumerate(self.slot_req) if r is None]:
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            L = len(req.prompt)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            s1 = init_state(self.cfg, 1, self.max_len)
+            logits, s1 = prefill(self.params, self.cfg, tokens, s1)
+            self._graft(s1, slot)
+            nxt = int(sample(logits[:, -1], self.sampler,
+                             jax.random.PRNGKey(req.rid))[0])
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new_tokens - 1
+            self.slot_last_tok[slot] = nxt
+            self.slot_pos[slot] = L
+
+    def _graft(self, s1, slot):
+        def graft_leaf(big, small):
+            for ax in range(min(big.ndim, 2)):
+                if big.shape[ax] == self.max_batch and small.shape[ax] == 1:
+                    idx = (slice(None),) * ax + (slot,)
+                    src = (slice(None),) * ax + (0,)
+                    return big.at[idx].set(small[src])
+            return big
+
+        new_scan = [jax.tree.map(graft_leaf, bl, sl)
+                    for bl, sl in zip(self.state["scan"], s1["scan"])]
+        new_rest = [jax.tree.map(graft_leaf, bl, sl)
+                    for bl, sl in zip(self.state["rest"], s1["rest"])]
+        self.state = dict(self.state, scan=new_scan, rest=new_rest)
+
+    def step(self):
+        self._admit()
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return self._drain_done()
+        toks = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
+        self.state["length"] = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.state = self._decode(self.params, toks, self.state)
+        nxt = np.asarray(sample(logits[:, 0], self.sampler, jax.random.PRNGKey(
+            int(self.slot_pos.sum()))))
+        for i in live:
+            req = self.slot_req[i]
+            tok = int(nxt[i])
+            if not hasattr(req, "_out"):
+                req._out = [int(self.slot_last_tok[i])]
+            req._out.append(tok)
+            self.slot_last_tok[i] = tok
+            self.slot_pos[i] += 1
+            self.slot_remaining[i] -= 1
+            if tok == req.eos_id or self.slot_remaining[i] <= 0:
+                self.done.append((req.rid, req._out))
+                self.slot_req[i] = None
+        return self._drain_done()
+
+    def _drain_done(self):
+        out, self.done = self.done, []
+        return out
+
+    def run(self, max_steps=10_000):
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+        return out
+
+
+def _workload(batch, vocab, max_new, rng):
+    lens = [5, 9, 12, 17, 23, 28, 33, 40]
+    reqs = []
+    for rid in range(batch):
+        L = lens[rid % len(lens)]
+        reqs.append(Request(rid=rid, prompt=rng.integers(
+            0, vocab, size=L).astype(np.int32), max_new_tokens=max_new))
+    return reqs
+
+
+def _measure(eng, make_reqs, ttft_prompt):
+    """Warm run (compiles), then timed admission + steady-state decode.
+
+    Returns (gen_tok_s, decode_tok_s, ttft_s): overall generated tokens/sec
+    including admissions, decode-only tokens/sec with all slots admitted
+    (the steady-state rate), and time-to-first-token for one warm
+    admission."""
+    for r in make_reqs():
+        eng.submit(r)
+    eng.run()
+    reqs = make_reqs()
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng._admit()                       # per-slot prefill + first tokens
+    t_admit = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    done = eng.run()
+    t_dec = time.perf_counter() - t0
+    n_tok = sum(len(t[1] if isinstance(t, tuple) else t.tokens) for t in done)
+    t0 = time.perf_counter()
+    eng.submit(Request(rid=10_000, prompt=ttft_prompt, max_new_tokens=2))
+    eng._admit()                       # prefill + first sampled token
+    ttft = time.perf_counter() - t0
+    eng.run()                          # drain the probe request
+    return (n_tok / (t_admit + t_dec),
+            (n_tok - len(reqs)) / t_dec,   # first tokens fell in admission
+            ttft)
+
+
+def serve_throughput(smoke: bool = False):
+    """tokens/sec + TTFT across batch sizes, legacy vs fused hot loop."""
+    if smoke:
+        cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                          d_ff=64, vocab=256, remat="none", dtype="float32")
+        batches, max_new, max_len = [1, 8], 8, 64
+    else:
+        # CPU-reference shape: small enough that the per-token model math
+        # does not drown the orchestration costs this benchmark isolates
+        # (dispatch count, logits transfer, state copies, host sampling).
+        cfg = ModelConfig(n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab=2048, remat="none", dtype="float32")
+        batches, max_new, max_len = [1, 4, 8], 64, 128
+    params = init(cfg, jax.random.PRNGKey(0))
+    sampler = SamplerConfig(temperature=0.0)
+    # Probe length 5 = the first workload length, so its prefill chunk
+    # shapes ({4, 1}) are warm at every batch size — TTFT measures the
+    # admission path, not a compile.
+    ttft_prompt = (np.arange(1, 6, dtype=np.int32) % cfg.vocab).astype(np.int32)
+
+    rows = []
+    for b in batches:
+        nprng = np.random.default_rng(0)
+        make_reqs = partial(_workload, b, cfg.vocab, max_new, nprng)
+        legacy = _LegacyEngine(cfg, params, max_batch=b, max_len=max_len,
+                               sampler=sampler)
+        gen_old, dec_old, ttft_old = _measure(legacy, make_reqs, ttft_prompt)
+        fused = ServeEngine(cfg, params, max_batch=b, max_len=max_len,
+                            sampler=sampler)
+        gen_new, dec_new, ttft_new = _measure(fused, make_reqs, ttft_prompt)
+        base = {"batch": b, "prompt_mix": "5..40", "max_new": max_new}
+        rows.append(dict(base, path="legacy",
+                         gen_tok_s=round(gen_old, 1),
+                         decode_tok_s=round(dec_old, 1),
+                         ttft_ms=round(ttft_old * 1e3, 1),
+                         decode_speedup=1.0))
+        rows.append(dict(base, path="fused",
+                         gen_tok_s=round(gen_new, 1),
+                         decode_tok_s=round(dec_new, 1),
+                         ttft_ms=round(ttft_new * 1e3, 1),
+                         decode_speedup=round(dec_new / dec_old, 2)))
+    return rows

@@ -10,11 +10,12 @@ from .model import (
     loss_fn,
     param_count,
     prefill,
+    prefill_into_slot,
     prepack_params,
 )
 
 __all__ = [
     "ModelConfig", "MoEConfig", "abstract_params", "decode_step", "forward",
     "init", "init_state", "layer_plan", "loss_fn", "param_count", "prefill",
-    "prepack_params",
+    "prefill_into_slot", "prepack_params",
 ]

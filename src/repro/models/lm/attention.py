@@ -174,8 +174,13 @@ def attention(
                 mask = attention_mask(q_pos, kv_pos, window=window, causal=causal)
                 mask &= (kv_pos[:, None, None, :] >= 0)
             else:
-                # Prefill: attend over the in-prompt window, then scatter the
-                # last `wsize` tokens into their p % w slots (fresh cache).
+                # Prefill: scatter the last `wsize` chunk tokens into their
+                # p % w slots, and attend over both the in-chunk tokens and
+                # the already-cached window — chunked prefill (serving's
+                # power-of-two prompt buckets) starts chunks at offsets > 0,
+                # so the window can reach back across the chunk boundary.
+                # Cached slots with a derived position < 0 were never
+                # written (fresh cache / short history) and are masked.
                 take = min(wsize, sq)
                 slots = q_pos[:, -take:] % wsize
                 bidx = jnp.arange(b)[:, None]
@@ -183,8 +188,17 @@ def attention(
                     "k": cache["k"].at[bidx, slots].set(k[:, -take:].astype(cache["k"].dtype)),
                     "v": cache["v"].at[bidx, slots].set(v[:, -take:].astype(cache["v"].dtype)),
                 }
-                kv_pos = q_pos
+                start = (jnp.broadcast_to(cache_index, (b,))[:, None]
+                         if cache_index is not None else
+                         jnp.zeros((b, 1), jnp.int32))
+                slot_ids = jnp.arange(wsize, dtype=jnp.int32)[None]
+                prev = start - 1   # last position before this chunk
+                cached_pos = prev - jnp.mod(prev - slot_ids, wsize)  # (B, w)
+                k = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+                v = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+                kv_pos = jnp.concatenate([cached_pos, q_pos], axis=1)
                 mask = attention_mask(q_pos, kv_pos, window=window, causal=causal)
+                mask &= (kv_pos[:, None, None, :] >= 0)
         else:
             new_cache = C.update_kv_cache(cache, k, v, cache_index)
             k, v = new_cache["k"], new_cache["v"]

@@ -399,3 +399,54 @@ def init_state(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     """Decode state; KV caches default to the model compute dtype."""
     dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
     return C.init_model_state(cfg, batch, max_len, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Slot-addressed prefill (continuous-batching admission path)
+# ---------------------------------------------------------------------------
+# The decode-state grid puts the batch axis at position 1 for scan-stacked
+# leaves ((n_reps, B, ...)) and position 0 for remainder-layer leaves and
+# ``length`` — fixed by ``cache.init_model_state``'s construction, so slot
+# addressing needs no per-leaf shape sniffing.
+
+def _slot_take(state, slot):
+    """Slice slot ``slot`` out of a (max_batch, ...) grid as a batch-1 state."""
+    def sl(ax):
+        return lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=ax)
+    return {
+        "scan": [jax.tree.map(sl(1), t) for t in state["scan"]],
+        "rest": [jax.tree.map(sl(0), t) for t in state["rest"]],
+        "length": jax.lax.dynamic_slice_in_dim(state["length"], slot, 1, axis=0),
+    }
+
+
+def _slot_put(state, s1, slot):
+    """Write a batch-1 state back into slot ``slot`` of the grid."""
+    def pu(ax):
+        return lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=ax)
+    return dict(
+        state,
+        scan=[jax.tree.map(pu(1), bt, st)
+              for bt, st in zip(state["scan"], s1["scan"])],
+        rest=[jax.tree.map(pu(0), bt, st)
+              for bt, st in zip(state["rest"], s1["rest"])],
+        length=pu(0)(state["length"], s1["length"]),
+    )
+
+
+def prefill_into_slot(params, cfg: ModelConfig, tokens, state, slot, start_pos):
+    """Prefill ``tokens`` (1, S) into slot ``slot`` of a decode-state grid.
+
+    Jit-safe (``slot``/``start_pos`` are traced scalars — one compiled
+    variant per chunk length S, not per slot or position) and donation-safe:
+    the grid updates are ``dynamic_update_slice``s, so under
+    ``donate_argnums`` XLA writes the slot in place instead of copying the
+    full (max_batch, max_len) state. Returns (last-token logits (1, 1, V),
+    updated grid). Chunked admission calls this once per power-of-two chunk
+    of the prompt, threading ``start_pos`` forward.
+    """
+    s1 = _slot_take(state, slot)
+    s1["length"] = jnp.reshape(jnp.asarray(start_pos, jnp.int32), (1,))
+    logits, s1 = prefill(params, cfg, tokens, s1)
+    return logits, _slot_put(state, s1, slot)

@@ -1,31 +1,47 @@
 """Batched serving engine: continuous batching over a fixed decode grid.
 
 The engine owns one device-resident decode state of shape
-``(max_batch, max_len)`` and runs two jitted programs:
+``(max_batch, max_len)`` plus a device-resident per-slot control block
+(last token, eos id, remaining budget, live flag, PRNG key) and runs three
+jitted programs, all with **buffer donation** so XLA updates the KV /
+recurrent state in place instead of allocating a copy per call:
 
-  * ``prefill_one`` — runs a prompt through the model into slot ``i`` of
-    the batch (per-slot KV insertion via dynamic updates), padded to the
-    next power-of-two prompt bucket to bound recompilation;
-  * ``decode_all``  — one token for every live slot per call (the decode
-    grid never reshapes; dead slots decode into a trash position).
+  * ``prefill_into_slot`` — admission path. The prompt is split into its
+    binary decomposition of power-of-two chunks (13 -> 8 + 4 + 1) and each
+    chunk prefills into slot ``i`` via ``dynamic_update_slice`` under jit;
+    chunk lengths are the only shape that varies, so a varied-length
+    workload compiles at most ceil(log2(max_len)) prefill variants.
+    Chunking (instead of right-padding to a bucket) keeps recurrent
+    (RG-LRU / RWKV) and ring-buffer states exact: carry state threads
+    across chunks and no pad token ever enters the recurrence.
+  * ``decode_n`` — steady state. A ``jax.lax.scan`` runs up to
+    ``drain_steps`` decode steps per dispatch when no admissions are
+    pending; **sampling is fused into the jitted step** (one engine key
+    split per step, then per slot), so only the (n, B) sampled tokens and
+    done flags cross to host — never the (B, vocab) logits. Dead slots
+    decode into a frozen trash position; the grid never reshapes.
+  * ``admit_ctrl`` — writes a freshly-prefilled slot's control entries and
+    samples its first token in-jit.
 
 Continuous batching: when a sequence finishes (EOS or budget), its slot is
 released and the next queued request prefills into it — the decode grid
-keeps running; there is no global drain. This is the vLLM-style admission
-scheme restricted to a static grid, which is what a fixed-shape compiled
-TPU program wants.
+keeps running; there is no global drain. While the queue is non-empty the
+engine decodes one step at a time so a freed slot is refilled at the next
+token boundary; once the queue drains it switches to multi-step dispatches.
 
-Fault tolerance: the engine state is a pytree; ``snapshot``/``restore``
-round-trips it through the checkpoint module, so a preempted server resumes
-mid-generation.
+Fault tolerance: ``snapshot``/``restore`` round-trip the device state +
+control block through the checkpoint module and carry the per-slot host
+bookkeeping in the manifest, so a preempted server resumes mid-generation
+(queued-but-unadmitted requests are the caller's to resubmit).
 
 PIM deployment: when ``cfg.pim`` is enabled the constructor prepacks every
 projection weight into :class:`repro.core.packed.PackedWeight` — the
 paper's program-subarrays-once step — so prefill/decode never re-calibrate,
-re-quantize or re-pack a weight (DESIGN.md §3).
+re-quantize or re-pack a weight (DESIGN.md §3/§4).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 
@@ -33,10 +49,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.lm import decode_step, init_state, prefill, prepack_params
+from repro.models.lm import (
+    decode_step, init_state, prefill_into_slot, prepack_params,
+)
 from repro.models.lm.config import ModelConfig
 
-from .sampler import SamplerConfig, sample
+from .sampler import SamplerConfig, sample_per_slot
 
 
 @dataclasses.dataclass
@@ -53,9 +71,22 @@ class Completion:
     tokens: list
 
 
+def _pow2_chunks(n: int) -> list[int]:
+    """Binary decomposition, largest first: 13 -> [8, 4, 1]."""
+    out = []
+    b = 1 << max(n.bit_length() - 1, 0)
+    while n:
+        if n >= b:
+            out.append(b)
+            n -= b
+        b >>= 1
+    return out
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
-                 max_len: int = 512, sampler: SamplerConfig | None = None):
+                 max_len: int = 512, sampler: SamplerConfig | None = None,
+                 seed: int = 0, drain_steps: int = 8):
         self.cfg = cfg
         # Deployment-time weight quantize+pack, exactly once (the paper
         # programs subarrays once): every prefill/decode after this reuses
@@ -64,23 +95,97 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.sampler = sampler or SamplerConfig()
+        self.drain_steps = max(1, drain_steps)
         self.state = init_state(cfg, max_batch, max_len)
-        # Per-slot host bookkeeping.
+        # Device-resident per-slot control block: consumed and produced by
+        # the jitted decode under donation, so steady state moves no
+        # control data between host and device.
+        self.ctrl = {
+            "last_tok": jnp.zeros((max_batch,), jnp.int32),
+            "eos": jnp.full((max_batch,), -1, jnp.int32),
+            "remaining": jnp.zeros((max_batch,), jnp.int32),
+            "live": jnp.zeros((max_batch,), bool),
+            "key": jax.random.PRNGKey(seed),
+        }
+        # Host bookkeeping mirrors (admission decisions + output assembly).
         self.slot_req: list = [None] * max_batch
+        self.slot_out: list = [[] for _ in range(max_batch)]
         self.slot_remaining = np.zeros(max_batch, np.int32)
-        self.slot_last_tok = np.zeros(max_batch, np.int32)
-        self.queue: list = []
+        self.queue: collections.deque = collections.deque()
         self.done: list = []
-        self.slot_pos = np.zeros(max_batch, np.int32)  # per-slot position
 
-        self._decode = jax.jit(partial(self._decode_impl, cfg))
+        self._prefill = jax.jit(partial(self._prefill_impl, cfg),
+                                donate_argnums=(1,))
+        self._admit_ctrl = jax.jit(partial(self._admit_impl, self.sampler),
+                                   donate_argnums=(0,))
+        self._decode = {}   # scan length -> jitted decode_n program
 
     # -- jitted bodies ------------------------------------------------------
 
     @staticmethod
-    def _decode_impl(cfg, params, tokens, state):
-        logits, new_state = decode_step(params, cfg, tokens, state)
-        return logits, new_state
+    def _prefill_impl(cfg, params, state, tokens, slot, start):
+        return prefill_into_slot(params, cfg, tokens, state, slot, start)
+
+    @staticmethod
+    def _admit_impl(sampler, ctrl, logits, slot, eos_id, n_new):
+        """Sample the first token and write slot ``slot``'s control entries."""
+        key, sub = jax.random.split(ctrl["key"])
+        tok = sample_per_slot(logits[:, -1], sampler, sub[None])[0]
+        eos_id = jnp.asarray(eos_id, jnp.int32)
+        alive = (jnp.asarray(n_new, jnp.int32) > 1) & (tok != eos_id)
+
+        def put(ref, val):
+            return jax.lax.dynamic_update_slice(
+                ref, jnp.asarray(val, ref.dtype)[None], (slot,))
+
+        ctrl = dict(
+            ctrl, key=key,
+            last_tok=put(ctrl["last_tok"], tok),
+            eos=put(ctrl["eos"], eos_id),
+            remaining=put(ctrl["remaining"], jnp.asarray(n_new, jnp.int32) - 1),
+            live=put(ctrl["live"], alive),
+        )
+        return ctrl, tok
+
+    @staticmethod
+    def _step_core(cfg, sampler, params, state, ctrl):
+        """One fused decode+sample step. Only (B,) tokens/flags leave jit."""
+        logits, new_state = decode_step(params, cfg,
+                                        ctrl["last_tok"][:, None], state)
+        key, sub = jax.random.split(ctrl["key"])
+        keys = jax.random.split(sub, ctrl["last_tok"].shape[0])
+        nxt = sample_per_slot(logits[:, 0], sampler, keys)
+        nxt = jnp.where(ctrl["live"], nxt, ctrl["last_tok"])
+        remaining = ctrl["remaining"] - ctrl["live"].astype(jnp.int32)
+        done = ctrl["live"] & ((nxt == ctrl["eos"]) | (remaining <= 0))
+        # Dead slots do not advance: their trash KV writes land on one row,
+        # which the next occupant overwrites before it becomes attendable.
+        new_state["length"] = jnp.where(ctrl["live"], new_state["length"],
+                                        state["length"])
+        ctrl = dict(ctrl, key=key, last_tok=nxt, remaining=remaining,
+                    live=ctrl["live"] & ~done)
+        return new_state, ctrl, nxt, done
+
+    @staticmethod
+    def _decode_impl(cfg, sampler, n, params, state, ctrl):
+        """``n`` fused decode steps per dispatch; emits (n, B) tokens/flags."""
+        def body(carry, _):
+            st, ct = carry
+            st, ct, tok, done = ServeEngine._step_core(cfg, sampler,
+                                                       params, st, ct)
+            return (st, ct), (tok, done)
+
+        (state, ctrl), (toks, dones) = jax.lax.scan(
+            body, (state, ctrl), None, length=n)
+        return state, ctrl, toks, dones
+
+    def _decode_fn(self, n: int):
+        fn = self._decode.get(n)
+        if fn is None:
+            fn = jax.jit(partial(self._decode_impl, self.cfg, self.sampler, n),
+                         donate_argnums=(1, 2))
+            self._decode[n] = fn
+        return fn
 
     # -- public API ---------------------------------------------------------
 
@@ -91,70 +196,54 @@ class ServeEngine:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     def _admit(self):
-        """Prefill queued requests into free slots (simple per-slot loop)."""
+        """Prefill queued requests into free slots, chunked power-of-two."""
         for slot in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue.pop(0)
-            L = len(req.prompt)
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            # Single-sequence prefill at batch=1, then graft into the grid.
-            s1 = init_state(self.cfg, 1, self.max_len)
-            logits, s1 = prefill(self.params, self.cfg, tokens, s1)
-            self._graft(s1, slot, L)
-            nxt = int(sample(logits[:, -1], self.sampler,
-                             jax.random.PRNGKey(req.rid))[0])
+            req = self.queue.popleft()
+            prompt = np.asarray(req.prompt, np.int32)
+            pos, logits = 0, None
+            for c in _pow2_chunks(len(prompt)):
+                tokens = jnp.asarray(prompt[pos:pos + c], jnp.int32)[None]
+                logits, self.state = self._prefill(
+                    self.params, self.state, tokens, slot, pos)
+                pos += c
+            self.ctrl, tok = self._admit_ctrl(
+                self.ctrl, logits, slot, req.eos_id, req.max_new_tokens)
+            first = int(tok)
+            self.slot_out[slot] = [first]
+            if req.max_new_tokens <= 1 or first == req.eos_id:
+                self.done.append(Completion(req.rid, self.slot_out[slot]))
+                continue
             self.slot_req[slot] = req
             self.slot_remaining[slot] = req.max_new_tokens - 1
-            self.slot_last_tok[slot] = nxt
-            self.slot_pos[slot] = L
-
-    def _graft(self, s1, slot: int, length: int):
-        """Copy batch-0 of a fresh prefill state into slot ``slot``.
-
-        Scan-position states carry a leading (n_reps,) axis; rest states
-        have batch leading — handled uniformly by shape inspection."""
-        def graft_leaf(big, small):
-            # The batch axis is wherever the fresh (batch=1) prefill state
-            # has extent 1 and the grid has extent max_batch — axis 0 for
-            # rest states, axis 1 for scan-stacked (reps leading).
-            for ax in range(min(big.ndim, 2)):
-                if big.shape[ax] == self.max_batch and small.shape[ax] == 1:
-                    idx = (slice(None),) * ax + (slot,)
-                    src = (slice(None),) * ax + (0,)
-                    return big.at[idx].set(small[src])
-            return big
-
-        new_scan = [jax.tree.map(graft_leaf, bl, sl)
-                    for bl, sl in zip(self.state["scan"], s1["scan"])]
-        new_rest = [jax.tree.map(graft_leaf, bl, sl)
-                    for bl, sl in zip(self.state["rest"], s1["rest"])]
-        self.state = dict(self.state, scan=new_scan, rest=new_rest)
 
     def step(self) -> list:
-        """Admit + one decode step for all live slots; returns completions."""
+        """Admit + decode (one step, or a drain of up to ``drain_steps``
+        fused steps when no admissions are pending); returns completions."""
         self._admit()
         live = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not live:
             return self._drain_done()
-        toks = jnp.asarray(self.slot_last_tok, jnp.int32)[:, None]
-        # Per-slot positions: each live slot decodes at its own offset.
-        self.state["length"] = jnp.asarray(self.slot_pos, jnp.int32)
-        logits, self.state = self._decode(self.params, toks, self.state)
-        nxt = np.asarray(sample(logits[:, 0], self.sampler, jax.random.PRNGKey(
-            int(self.slot_pos.sum()))))
-        for i in live:
-            req = self.slot_req[i]
-            tok = int(nxt[i])
-            if not hasattr(req, "_out"):
-                req._out = [int(self.slot_last_tok[i])]
-            req._out.append(tok)
-            self.slot_last_tok[i] = tok
-            self.slot_pos[i] += 1
-            self.slot_remaining[i] -= 1
-            if tok == req.eos_id or self.slot_remaining[i] <= 0:
-                self.done.append(Completion(req.rid, req._out))
-                self.slot_req[i] = None
+        if self.queue:
+            n = 1   # keep admissions responsive: a slot may free next token
+        else:
+            cap = max(1, min(self.drain_steps,
+                             int(max(self.slot_remaining[i] for i in live))))
+            n = 1 << (cap.bit_length() - 1)   # pow2 -> bounded compile count
+        self.state, self.ctrl, toks, dones = self._decode_fn(n)(
+            self.params, self.state, self.ctrl)
+        toks = np.asarray(toks)
+        dones = np.asarray(dones)
+        for k in range(n):
+            for i in list(live):
+                req = self.slot_req[i]
+                self.slot_out[i].append(int(toks[k, i]))
+                self.slot_remaining[i] -= 1
+                if dones[k, i]:
+                    self.done.append(Completion(req.rid, self.slot_out[i]))
+                    self.slot_req[i] = None
+                    live.remove(i)
         return self._drain_done()
 
     def _drain_done(self):
@@ -169,3 +258,46 @@ class ServeEngine:
             if not self.queue and all(r is None for r in self.slot_req):
                 break
         return out
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def snapshot(self, ckpt_dir: str, step: int = 0):
+        """Checkpoint device state + control block + slot bookkeeping.
+
+        Queued-but-unadmitted requests are not saved — resubmit after
+        ``restore``. Safe mid-generation: saving copies to host, it does
+        not consume the donated device buffers."""
+        from repro.training import checkpoint as ckpt
+
+        slots = []
+        for i, r in enumerate(self.slot_req):
+            slots.append(None if r is None else {
+                "rid": r.rid, "prompt": np.asarray(r.prompt).tolist(),
+                "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id,
+                "out": list(self.slot_out[i]),
+                "remaining": self.slot_remaining[i],
+            })
+        ckpt.save(ckpt_dir, step, {"state": self.state, "ctrl": self.ctrl},
+                  extra={"slots": slots, "max_batch": self.max_batch,
+                         "max_len": self.max_len})
+
+    def restore(self, ckpt_dir: str, step: int | None = None):
+        """Resume mid-generation from :meth:`snapshot` (same cfg/geometry)."""
+        from repro.training import checkpoint as ckpt
+
+        like = {"state": self.state, "ctrl": self.ctrl}
+        tree, manifest = ckpt.restore(ckpt_dir, like, step=step)
+        tree = jax.tree.map(jnp.asarray, tree)   # host -> device once
+        self.state, self.ctrl = tree["state"], tree["ctrl"]
+        for i, s in enumerate(manifest["extra"]["slots"]):
+            if s is None:
+                self.slot_req[i] = None
+                self.slot_out[i] = []
+                self.slot_remaining[i] = 0
+            else:
+                self.slot_req[i] = Request(
+                    rid=s["rid"], prompt=np.asarray(s["prompt"], np.int32),
+                    max_new_tokens=s["max_new_tokens"], eos_id=s["eos_id"])
+                self.slot_out[i] = list(s["out"])
+                self.slot_remaining[i] = s["remaining"]
+        return manifest

@@ -22,3 +22,21 @@ def sample(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
         kth = jax.lax.top_k(l, cfg.top_k)[0][..., -1:]
         l = jnp.where(l < kth, -jnp.inf, l)
     return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
+
+
+def sample_per_slot(logits: jax.Array, cfg: SamplerConfig, keys) -> jax.Array:
+    """logits (B, V), keys (B, 2) -> token ids (B,); row i uses keys[i].
+
+    The serving decode loop threads one engine key per step and splits it
+    per slot, so a slot's sample stream is independent of the batch
+    composition around it and a key is never reused across steps (unlike
+    deriving a key from summed slot positions, which collides whenever two
+    steps share the same sum)."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k:
+        kth = jax.lax.top_k(l, cfg.top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    return jax.vmap(
+        lambda row, k: jax.random.categorical(k, row))(l, keys).astype(jnp.int32)

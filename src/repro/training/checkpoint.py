@@ -72,6 +72,23 @@ def wait_pending():
     _PENDING.clear()
 
 
+def _jsonable(obj):
+    """Manifest-safe ``extra``: numpy scalars/arrays -> python natives.
+
+    Serving snapshots carry per-slot bookkeeping (np.int32 budgets, token
+    arrays) in ``extra``; json.dump rejects numpy types, so sanitize at the
+    write boundary rather than at every call site."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
 def _write(ckpt_dir: str, step: int, host_leaves, paths, extra):
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
@@ -93,7 +110,7 @@ def _write(ckpt_dir: str, step: int, host_leaves, paths, extra):
             "paths": paths,
             "n_leaves": len(host_leaves),
             "n_shards": len(shards),
-            "extra": extra,
+            "extra": _jsonable(extra),
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)

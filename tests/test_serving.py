@@ -72,3 +72,116 @@ def test_batched_slots_are_isolated(setup):
     done = {c.rid: c.tokens for c in e.run()}
     assert done[1] == w1
     assert done[2] == w2
+
+
+def test_mixed_workload_token_identical(setup):
+    """Continuous-batching correctness: staggered submits, different prompt
+    lengths, EOS mid-stream, and slot reuse after release produce output
+    token-identical to generating each request alone (forward oracle)."""
+    params = setup
+    prompts = {
+        0: np.array([3, 1, 4, 1, 5], np.int32),
+        1: np.array([7, 8], np.int32),
+        2: np.array([9, 2, 6, 5, 3, 5, 8], np.int32),
+        3: np.array([11, 12, 13], np.int32),
+    }
+    max_new = {0: 6, 1: 4, 2: 5, 3: 6}
+    want = {rid: _greedy_reference(params, p.tolist(), max_new[rid])
+            for rid, p in prompts.items()}
+    # rid 2 terminates on EOS mid-stream: its eos id is a token the greedy
+    # stream is known to emit; expectation truncates at first occurrence.
+    eos = {rid: -1 for rid in prompts}
+    eos[2] = want[2][2]
+    j = want[2].index(eos[2])
+    want[2] = want[2][:j + 1]
+
+    eng = ServeEngine(CFG, params, max_batch=2, max_len=64,
+                      sampler=SamplerConfig(temperature=0.0))
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=max_new[0]))
+    eng.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=max_new[1]))
+    done = []
+    done += eng.step()   # both admitted, one token each
+    done += eng.step()
+    # staggered: 2 more requests arrive while the grid is mid-decode; they
+    # reuse slots released by rid 0/1 (4 requests > 2 slots).
+    eng.submit(Request(rid=2, prompt=prompts[2], max_new_tokens=max_new[2],
+                       eos_id=int(eos[2])))
+    eng.submit(Request(rid=3, prompt=prompts[3], max_new_tokens=max_new[3]))
+    done += eng.run()
+    got = {c.rid: c.tokens for c in done}
+    assert got == want
+
+
+def test_prefill_bucketing_bounds_compiles(setup):
+    """Power-of-two chunked prefill: a varied-prompt-length workload compiles
+    at most ceil(log2(max_len)) prefill variants, and the decode drain at
+    most log2(drain_steps)+1 scan-length variants."""
+    import math
+
+    params = setup
+    max_len = 64
+    eng = ServeEngine(CFG, params, max_batch=2, max_len=max_len)
+    rng = np.random.default_rng(3)
+    for rid, L in enumerate([2, 3, 5, 7, 9, 11, 13, 6]):   # every length distinct mod pow2
+        eng.submit(Request(rid=rid, prompt=rng.integers(
+            0, CFG.vocab, size=L).astype(np.int32), max_new_tokens=5))
+    done = eng.run()
+    assert len(done) == 8
+    bucket_bound = math.ceil(math.log2(max_len))
+    assert eng._prefill._cache_size() <= bucket_bound, (
+        eng._prefill._cache_size(), bucket_bound)
+    n_decode = sum(fn._cache_size() for fn in eng._decode.values())
+    assert n_decode <= int(math.log2(eng.drain_steps)) + 1
+
+
+def test_sampling_keys_advance_across_steps(setup):
+    """Regression for the decode-sampling PRNG bug: the old key derivation
+    ``PRNGKey(slot_pos.sum())`` repeats whenever a later request replays the
+    same positions (identical prompt into the same slot), making stochastic
+    sampling replay the exact same stream. The threaded engine-key chain
+    must keep advancing across requests — and stay reproducible per seed."""
+    params = setup
+    prompt = np.array([5, 6, 7], np.int32)
+
+    def run_two(seed):
+        eng = ServeEngine(CFG, params, max_batch=2, max_len=64,
+                          sampler=SamplerConfig(temperature=3.0), seed=seed)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=12))
+        a = eng.run()[0].tokens
+        # same prompt, same slot, same positions — old scheme replays keys
+        eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=12))
+        b = eng.run()[0].tokens
+        return a, b
+
+    a1, b1 = run_two(seed=0)
+    assert a1 != b1, "identical replay: sampling keys were reused across steps"
+    a2, b2 = run_two(seed=0)
+    assert (a1, b1) == (a2, b2), "same seed must reproduce the same streams"
+    a3, _ = run_two(seed=1)
+    assert a3 != a1, "different seeds must give different streams"
+
+
+def test_snapshot_restore_determinism(setup, tmp_path):
+    """A preempted engine restored from a snapshot continues mid-generation
+    with token-identical output — including the stochastic sampler state."""
+    params = setup
+
+    def fresh(seed=0):
+        return ServeEngine(CFG, params, max_batch=2, max_len=64,
+                           sampler=SamplerConfig(temperature=0.7),
+                           seed=seed, drain_steps=2)
+
+    eng = fresh()
+    eng.submit(Request(rid=0, prompt=np.array([3, 1, 4], np.int32),
+                       max_new_tokens=16))
+    eng.submit(Request(rid=1, prompt=np.array([1, 5, 9, 2], np.int32),
+                       max_new_tokens=16))
+    pre = eng.step()          # admit + a short drain; nothing completes yet
+    assert not pre
+    eng.snapshot(str(tmp_path), step=1)
+    want = {c.rid: c.tokens for c in eng.run()}
+
+    eng2 = fresh(seed=99)     # seed overwritten by the restored key chain
+    eng2.restore(str(tmp_path))
+    got = {c.rid: c.tokens for c in eng2.run()}
+    assert got == want
