@@ -43,6 +43,8 @@ def main(argv=None):
 
     serve_throughput = functools.partial(serve_bench.serve_throughput,
                                          smoke=args.smoke)
+    serve_scaling = functools.partial(serve_bench.serve_device_scaling,
+                                      smoke=args.smoke)
     sections = [
         ("fig13a: capacity sweep", paper_figures.fig13a_capacity_sweep),
         ("fig13b: bandwidth sweep", paper_figures.fig13b_bandwidth_sweep),
@@ -62,6 +64,8 @@ def main(argv=None):
         ("dry-run: multi-pod 2x16x16 compile status", lm_roofline.multipod_check),
         ("perf: baseline vs optimized step-time bound", lm_roofline.baseline_vs_optimized),
         ("serve: engine throughput (legacy vs fused hot loop)", serve_throughput),
+        ("serve: device-count scaling (chips=data x banks=model mesh)",
+         serve_scaling),
     ]
     # Kernel sections feeding BENCH_kernels.json (rows reused, not re-run).
     json_keys = {
@@ -84,6 +88,9 @@ def main(argv=None):
                 payload[json_keys[fn]] = rows
             elif fn is serve_throughput:
                 serve_payload["serve_throughput"] = rows
+            elif fn is serve_scaling:
+                serve_payload["device_scaling"] = rows
+            if serve_payload:
                 serve_payload["smoke"] = args.smoke
         except Exception as e:  # keep the suite running; report at the end
             failures.append((title, repr(e)))
@@ -95,6 +102,12 @@ def main(argv=None):
             continue
         path = os.path.join(repo_root, name)
         try:
+            # Merge over the committed artifact so a filtered run (--only
+            # matching one section) or a section failure updates its own
+            # keys without destroying the rows other sections produced.
+            if os.path.exists(path):
+                with open(path) as fh:
+                    data = {**json.load(fh), **data}
             with open(path, "w") as fh:
                 json.dump(data, fh, indent=1)
             print(f"\nwrote {path}")

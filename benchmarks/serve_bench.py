@@ -1,4 +1,5 @@
-"""Serving throughput benchmark: seed engine hot loop vs the fused one.
+"""Serving throughput benchmark: seed engine hot loop vs the fused one,
+plus a device-count scaling sweep over the serving mesh.
 
 ``_LegacyEngine`` reproduces the pre-overhaul ``ServeEngine`` faithfully:
 unjitted batch-1 prefill + host-side graft (rebuilds every leaf of the full
@@ -15,12 +16,24 @@ Measured per batch size, same prompt-length mix on both paths:
   * ``ttft_ms``    — time-to-first-token for one admission into a warm
     engine (prompt prefill + first sampled token).
 
-``benchmarks.run --only serve`` renders the table and writes
+``serve_device_scaling`` sweeps the mesh-sharded engine across forced
+host-device counts (each cell is a subprocess: XLA fixes the device count
+at backend init), recording decode tokens/sec per (data × model) mesh —
+the paper's chips × banks mapping (DESIGN.md §5). On a CPU host the forced
+devices share the same cores, so this tracks the *mechanism* (collective
+overhead, layout stability), not real speedup; on a TPU slice the same
+rows measure actual scaling.
+
+``benchmarks.run --only serve`` renders the tables and writes
 ``BENCH_serving.json`` at the repo root; ``--smoke`` shrinks the model and
 token counts to CI scale (the artifact shape is identical).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 from functools import partial
 
@@ -167,6 +180,79 @@ def _measure(eng, make_reqs, ttft_prompt):
     return (n_tok / (t_admit + t_dec),
             (n_tok - len(reqs)) / t_dec,   # first tokens fell in admission
             ttft)
+
+
+def _scaling_cfg(smoke: bool):
+    """Model/workload for the device sweep. Head and hidden dims divide the
+    2-way model axis so the TP split is clean at every device count."""
+    if smoke:
+        cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab=256, remat="none", dtype="float32")
+        return cfg, 8, 64
+    cfg = ModelConfig(n_layers=3, d_model=128, n_heads=4, n_kv_heads=2,
+                      d_ff=256, vocab=2048, remat="none", dtype="float32")
+    return cfg, 32, 128
+
+
+_SCALE_SCRIPT = r"""
+import sys
+n, model_par, smoke = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3])
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d" % n
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+from functools import partial
+import jax
+import numpy as np
+from benchmarks.serve_bench import _measure, _scaling_cfg, _workload
+from repro.launch.mesh import make_serve_mesh
+from repro.models.lm import init
+from repro.serving import SamplerConfig, ServeEngine
+
+cfg, max_new, max_len = _scaling_cfg(bool(smoke))
+params = init(cfg, jax.random.PRNGKey(0))
+mesh = make_serve_mesh(model_par) if n > 1 else None
+eng = ServeEngine(cfg, params, max_batch=8, max_len=max_len,
+                  sampler=SamplerConfig(temperature=0.0), mesh=mesh)
+rng = np.random.default_rng(0)
+make_reqs = partial(_workload, 8, cfg.vocab, max_new, rng)
+ttft_prompt = (np.arange(1, 6, dtype=np.int32) % cfg.vocab).astype(np.int32)
+gen, dec, ttft = _measure(eng, make_reqs, ttft_prompt)
+print(json.dumps({
+    "devices": n,
+    "mesh": "-" if mesh is None else "%dx%d (data x model)" % (
+        n // model_par, model_par),
+    "gen_tok_s": round(gen, 1), "decode_tok_s": round(dec, 1),
+    "ttft_ms": round(ttft * 1e3, 1)}))
+"""
+
+
+def serve_device_scaling(smoke: bool = False):
+    """Decode throughput of the mesh-sharded engine per device count.
+
+    Each cell runs in a subprocess so XLA_FLAGS can force that cell's host
+    device count before jax initializes; the 1-device cell is the mesh-free
+    engine (the baseline the speedup column normalizes against).
+    """
+    cells = [(1, 1), (2, 2)] if smoke else [(1, 1), (2, 2), (4, 2), (8, 2)]
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH="src" + os.pathsep + ".",
+               JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    rows = []
+    for n, model_par in cells:
+        out = subprocess.run(
+            [sys.executable, "-c", _SCALE_SCRIPT, str(n), str(model_par),
+             str(int(smoke))],
+            capture_output=True, text=True, env=env, cwd=repo)
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"device-scaling cell n={n} failed: {out.stderr[-2000:]}")
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    base = rows[0]["decode_tok_s"] or 1.0
+    for r in rows:
+        r["decode_speedup_vs_1dev"] = round(r["decode_tok_s"] / base, 2)
+    return rows
 
 
 def serve_throughput(smoke: bool = False):

@@ -4,6 +4,15 @@ Submits more requests than decode slots; the engine prefills into freed
 slots while other sequences keep decoding (no global drain).
 
   PYTHONPATH=src python examples/serve_lm.py
+
+Multi-device: when more than one accelerator is visible the example builds
+a ("data", "model") serving mesh — decode slots (the paper's chips) shard
+on "data", weight columns (the banks) on "model" (DESIGN.md §5). A
+CPU-only box can fake the devices; XLA reads this flag at backend init, so
+it must be set before any jax import:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/serve_lm.py
 """
 import time
 
@@ -12,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import make_serve_mesh
 from repro.models.lm import init as model_init
 from repro.models.lm.model import cast_params
 from repro.serving import Request, SamplerConfig, ServeEngine
@@ -21,8 +31,16 @@ def main():
     cfg = get_config("qwen3-0.6b").model.reduced()
     params = cast_params(model_init(cfg, jax.random.PRNGKey(0)),
                          jnp.dtype(cfg.dtype))
+    mesh = None
+    if len(jax.devices()) > 1:
+        # 2-way bank/tensor parallelism when the device count allows it;
+        # the remaining devices shard the 4 decode slots.
+        model_par = 2 if len(jax.devices()) % 2 == 0 else 1
+        mesh = make_serve_mesh(model_par)
+        print(f"mesh: {dict(mesh.shape)}")
     eng = ServeEngine(cfg, params, max_batch=4, max_len=96,
-                      sampler=SamplerConfig(temperature=0.8, top_k=40))
+                      sampler=SamplerConfig(temperature=0.8, top_k=40),
+                      mesh=mesh)
     rng = np.random.default_rng(7)
     n_req = 10
     t0 = time.time()

@@ -83,17 +83,71 @@ class PackedConvWeight:
         return self.mat.to_float().reshape(self.kernel_shape)
 
 
-def prepack(w: jax.Array, w_bits: int) -> PackedWeight:
+def prepack(w: jax.Array, w_bits: int, mesh=None, axis: str = "model",
+            split: str = "n") -> PackedWeight:
     """Quantize + bit-slice + lane-pack a (K, N) weight once.
 
     Everything here is jnp, so ``jax.vmap(prepack)`` prepacks scan-stacked
     (R, K, N) parameter leaves (the LM layer stack) in one shot.
+
+    ``mesh``: distribute the packed planes across a device mesh right after
+    packing (the paper's banks each receiving their weight columns) — see
+    :func:`shard_packed` for the ``axis``/``split`` semantics. ``mesh`` is
+    an eager-only convenience (``device_put`` cannot run under a trace):
+    under ``vmap``/``jit`` leave it None and call :func:`shard_packed` on
+    the stacked result instead — it handles the leading reps axis.
     """
     wq = calibrate_minmax(w, w_bits)
     codes = quantize(w, wq)
     planes = bitslice.slice_and_pack(codes.T, w_bits)  # (bits, N, KW)
-    return PackedWeight(codes=codes, planes=planes,
-                        col_sums=codes.sum(0).astype(jnp.int32), wq=wq)
+    out = PackedWeight(codes=codes, planes=planes,
+                       col_sums=codes.sum(0).astype(jnp.int32), wq=wq)
+    if mesh is not None:
+        out = shard_packed(out, mesh, axis=axis, split=split)
+    return out
+
+
+def shard_packed(pw: PackedWeight, mesh, axis: str = "model",
+                 split: str = "n") -> PackedWeight:
+    """Distribute a :class:`PackedWeight` across a device mesh.
+
+    ``split="n"`` — the paper's *bank* mapping: output columns are dealt
+    out across ``axis`` (planes split on their N dim, along with codes and
+    the correction ``col_sums``); each shard's matmul is complete for its
+    columns, no reduction needed.
+
+    ``split="k"`` — the *subarray-group* mapping: the packed contraction
+    words split across ``axis`` (planes on KW, codes on K); each shard
+    produces int32 partial sums that must reduce via
+    ``distributed.collectives.exact_psum`` (see
+    ``kernels.bitserial_matmul.bitserial_matmul_sharded``).
+
+    Dims that do not divide the axis stay replicated via the sharding-rule
+    guard — which warns once per drop, so a "bank-sharded" deployment that
+    actually replicated (non-divisible N or KW) is visible. Scan-stacked
+    prepacks (leading reps axis) shard the same logical dims shifted by one.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import _guard
+
+    if split not in ("n", "k"):
+        raise ValueError(f"split {split!r}: want 'n' (banks) | 'k' (subarrays)")
+
+    def put(leaf, spec, field):
+        stack = leaf.ndim - len(spec)          # 1 when vmap-prepacked
+        spec = _guard((None,) * stack + tuple(spec), leaf.shape, mesh,
+                      label=f"shard_packed:{field}")
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    k_ax, n_ax = (axis, None) if split == "k" else (None, axis)
+    return PackedWeight(
+        codes=put(pw.codes, (k_ax, n_ax), "codes"),
+        planes=put(pw.planes, (None, n_ax, k_ax), "planes"),
+        col_sums=put(pw.col_sums, (n_ax,), "col_sums"),
+        wq=jax.tree.map(
+            lambda l: jax.device_put(l, NamedSharding(mesh, P())), pw.wq),
+    )
 
 
 def prepack_conv(w: jax.Array, w_bits: int) -> PackedConvWeight:

@@ -22,19 +22,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-# jax.shard_map / jax.lax.pvary landed after 0.4.x; fall back to the
-# experimental shard_map (whose replication checker predates vma typing —
-# disable it, the ppermute/psum pattern below is device-varying by design).
+# jax.lax.pvary landed after 0.4.x; the shard_map version split lives in
+# collectives.shard_map_compat. The replication checker is disabled here:
+# the ppermute/psum pattern below is device-varying by design.
 _pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    from jax.experimental.shard_map import shard_map as _sm
+    from .collectives import shard_map_compat
 
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
+    return shard_map_compat(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                            check_rep=False)
 
 
 def pipeline_forward(stage_params, x_microbatches, stage_fn, mesh,

@@ -18,9 +18,13 @@ FFN hidden dim shards instead (grok: 8e -> TP inside every expert).
 """
 from __future__ import annotations
 
+import logging
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_log = logging.getLogger(__name__)
 
 # ---------------------------------------------------------------------------
 # Mesh context (set by launchers; model code stays mesh-agnostic)
@@ -28,11 +32,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _MESH: Mesh | None = None
 _TIED = False
+_SERVE_LAYOUT = False
 
 
 def set_mesh(mesh: Mesh | None):
     global _MESH
     _MESH = mesh
+
+
+def set_serve_layout(on: bool):
+    """Select the serving KV-cache layout (heads on "model", DESIGN.md §5)
+    for at-use constraints like ``constrain_kv_update`` — the training
+    layout shards the KV *sequence* instead. ``ServeEngine`` scopes this
+    (with the mesh) around its program calls."""
+    global _SERVE_LAYOUT
+    _SERVE_LAYOUT = bool(on)
+
+
+def get_serve_layout() -> bool:
+    return _SERVE_LAYOUT
 
 
 def set_tied_embeddings(tied: bool):
@@ -144,8 +162,34 @@ def _axis_for(tag, mesh: Mesh):
     return None
 
 
-def _guard(spec_axes: tuple, shape: tuple, mesh: Mesh) -> P:
-    """Drop axes that don't divide the dim; pad spec to the leaf's rank."""
+# (label, axis, dim, size) tuples already reported — the guard drops axes
+# during every tree_map over every leaf, so an unthrottled warning would
+# print thousands of identical lines for one misconfigured mesh.
+_warned_drops: set = set()
+
+
+def reset_drop_warnings():
+    """Clear the warn-once cache (tests; or after switching meshes)."""
+    _warned_drops.clear()
+
+
+def _warn_drop(label: str, ax, dim: int, sz: int):
+    key = (label, str(ax), int(dim), int(sz))
+    if key in _warned_drops:
+        return
+    _warned_drops.add(key)
+    _log.warning(
+        "sharding: %s dim %d not divisible by mesh axis %r (size %d) — "
+        "dropping to replication; this leaf will not shard on this mesh",
+        label or "<leaf>", dim, ax, sz)
+
+
+def _guard(spec_axes: tuple, shape: tuple, mesh: Mesh, label: str = "") -> P:
+    """Drop axes that don't divide the dim; pad spec to the leaf's rank.
+
+    Each drop of a *real* axis (mesh size > 1) logs a one-time warning so a
+    misconfigured mesh (nothing actually sharding) is visible instead of
+    silently replicating everything."""
     spec = list(spec_axes) + [None] * (len(shape) - len(spec_axes))
     out = []
     for dim, ax in zip(shape, spec):
@@ -154,7 +198,12 @@ def _guard(spec_axes: tuple, shape: tuple, mesh: Mesh) -> P:
             continue
         axes = ax if isinstance(ax, tuple) else (ax,)
         sz = axis_size(mesh, *axes)
-        out.append(ax if sz > 1 and dim % sz == 0 else None)
+        if sz > 1 and dim % sz == 0:
+            out.append(ax)
+        else:
+            if sz > 1:
+                _warn_drop(label, ax, dim, sz)
+            out.append(None)
     return P(*out)
 
 
@@ -188,7 +237,7 @@ def _param_spec(path, leaf, mesh: Mesh, n_experts: int | None) -> P:
         shape = leaf.shape
     else:
         shape = leaf.shape
-    return _guard(spec, shape, mesh)
+    return _guard(spec, shape, mesh, label=f"param:{name}")
 
 
 def param_shardings(params_tree, mesh: Mesh, n_experts: int | None = None):
@@ -247,7 +296,7 @@ def _state_spec(path, leaf, mesh: Mesh, global_batch: int) -> P:
         spec = tuple(None for _ in leaf.shape)
     if len(spec) < leaf.ndim:    # stacked: prepend None for the reps axis
         spec = (None,) * (leaf.ndim - len(spec)) + tuple(spec)
-    return _guard(tuple(spec), leaf.shape, mesh)
+    return _guard(tuple(spec), leaf.shape, mesh, label=f"state:{name}")
 
 
 def state_shardings(state_tree, mesh: Mesh, global_batch: int):
@@ -257,19 +306,146 @@ def state_shardings(state_tree, mesh: Mesh, global_batch: int):
 
 
 def constrain_kv_update(k_new):
-    """Pin a multi-token KV update (B, S_new, H, hd) to the cache's
-    flash-decoding layout (batch on DP, sequence on TP) BEFORE the scatter —
-    otherwise GSPMD reshards the whole prefill KV through the scatter
-    (measured: 2-5x collective-term regressions on prefill cells)."""
+    """Pin a multi-token KV update (B, S_new, H, hd) to the cache's layout
+    BEFORE the scatter — otherwise GSPMD reshards the whole prefill KV
+    through the scatter (measured: 2-5x collective-term regressions on
+    prefill cells).
+
+    Training/dry-run layout: batch on DP, sequence on TP (flash-decoding).
+    Serving layout (``set_serve_layout``): *heads* on TP, matching
+    ``serve_state_shardings`` — pinning the training layout here instead
+    would force a reshard against the heads-split serving cache on every
+    admission chunk."""
     if _MESH is None or k_new.ndim != 4 or k_new.shape[1] == 1:
         return k_new
     dp = dp_axes(_MESH)
     b_ok = dp and k_new.shape[0] % axis_size(_MESH, *dp) == 0
-    seq_ok = ("model" in _MESH.axis_names
-              and k_new.shape[1] % axis_size(_MESH, "model") == 0)
-    spec = P(dp if b_ok else None, "model" if seq_ok else None, None, None)
+    tp = axis_size(_MESH, "model")
+    if _SERVE_LAYOUT:
+        heads_ok = tp > 1 and k_new.shape[2] % tp == 0
+        spec = P(dp if b_ok else None, None,
+                 "model" if heads_ok else None, None)
+    else:
+        seq_ok = tp > 1 and k_new.shape[1] % tp == 0
+        spec = P(dp if b_ok else None, "model" if seq_ok else None,
+                 None, None)
     return jax.lax.with_sharding_constraint(k_new, NamedSharding(_MESH, spec))
 
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Serving rules (mesh-sharded ServeEngine — DESIGN.md §5)
+# ---------------------------------------------------------------------------
+# The serving mesh maps the paper's chip→bank→subarray hierarchy:
+#
+#   chips     -> "data"  axis: continuous-batching slots (the decode-state
+#                grid's batch dim and the per-slot ctrl block)
+#   banks     -> "model" axis: N-dim column split of every projection weight
+#                — for prepacked weights that means the PackedWeight planes
+#                (bits, N, K/32), codes and correction col_sums split on N
+#   subarrays -> VMEM tiles inside the bit-serial kernels (BlockSpec)
+#
+# Parameters shard on "model" ONLY. Serving never takes the FSDP rules:
+# ZeRO-style parameter sharding would all-gather every weight every decode
+# step, which is exactly the data movement the paper's mapping avoids.
+# KV-cache heads and recurrent hidden dims ride "model" so the TP-sharded
+# projections write decode state without any resharding in the hot loop.
+
+def _serve_param_spec(path, leaf, mesh: Mesh) -> P:
+    dicts = [k.key for k in path if hasattr(k, "key")]
+    attrs = [k.name for k in path if hasattr(k, "name")]
+    name = dicts[-1] if dicts else ""
+    if not hasattr(leaf, "ndim"):
+        return P()
+    # embed stays replicated: its primary op is the token gather, and the
+    # tied-head GEMM on a TP-sharded vocab would gather logits anyway.
+    rule = None if name == "embed" else _PARAM_RULES.get(name)
+    if rule is None:
+        return P(*(None,) * leaf.ndim)
+    base = tuple("model" if t == "tp" else None for t in rule)
+    if attrs:
+        # Inside a PackedWeight: map the logical (K, N) rule onto the packed
+        # representation. attrs[0] == "wq" means QuantParams scale/qmin
+        # (per-tensor scalars) and conv extras stay replicated.
+        k_ax, n_ax = (base + (None, None))[:2]
+        field = attrs[0]
+        if field == "codes":
+            spec = (k_ax, n_ax)
+        elif field == "planes":
+            spec = (None, n_ax, k_ax)          # (bits, N, K//32)
+        elif field == "col_sums":
+            spec = (n_ax,)
+        else:
+            return P(*(None,) * leaf.ndim)
+    else:
+        spec = base
+    spec = tuple(spec)[:leaf.ndim]
+    if leaf.ndim > len(spec):                  # scan-stacked leading reps axis
+        spec = (None,) * (leaf.ndim - len(spec)) + spec
+    return _guard(spec, leaf.shape, mesh, label=f"serve-param:{name}")
+
+
+def serve_param_shardings(params_tree, mesh: Mesh):
+    """Serving shardings for a (possibly prepacked) param tree: TP on
+    "model" only, PackedWeight planes/col_sums split on their N dim."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, _serve_param_spec(p, l, mesh)),
+        params_tree)
+
+
+def _serve_state_spec(path, leaf, mesh: Mesh) -> P:
+    names = [k.key for k in path if hasattr(k, "key")]
+    name = names[-1] if names else ""
+    stacked = bool(names) and names[0] == "scan"
+    if name in ("k", "v"):                     # (B, S, H, hd): heads on TP —
+        spec = ("data", None, "model", None)   # aligned with the wk/wv column
+    elif name in ("k_scale", "v_scale"):       # split, so the per-token KV
+        spec = ("data", None, "model")         # write never reshards
+    elif name == "wkv":                        # (B, H, D, D)
+        spec = ("data", "model", None, None)
+    elif name in ("tm_shift", "cm_shift", "h"):
+        spec = ("data", "model")
+    elif name == "conv":                       # (B, K-1, W)
+        spec = ("data", None, "model")
+    elif name == "length":
+        spec = ("data",)
+    else:
+        spec = (None,) * leaf.ndim
+    if stacked:
+        spec = (None,) + tuple(spec)
+    return _guard(tuple(spec), leaf.shape, mesh, label=f"serve-state:{name}")
+
+
+def serve_state_shardings(state_tree, mesh: Mesh):
+    """Decode-state grid shardings: batch slots (the paper's chips) on
+    "data", KV heads / recurrent hidden dims on "model"."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, _serve_state_spec(p, l, mesh)),
+        state_tree)
+
+
+def serve_ctrl_shardings(ctrl_tree, mesh: Mesh):
+    """Per-slot ctrl block: (max_batch,) vectors on "data"; the engine PRNG
+    key (and anything non-slot-shaped) replicated."""
+    def spec(path, leaf):
+        name = path[-1].key if path and hasattr(path[-1], "key") else ""
+        if name == "key" or leaf.ndim != 1:
+            return P(*(None,) * leaf.ndim)
+        return _guard(("data",), leaf.shape, mesh, label=f"serve-ctrl:{name}")
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec(p, l)), ctrl_tree)
+
+
+def serve_stream_sharding(mesh: Mesh, n_slots: int, rank: int = 2,
+                          slot_dim: int = 1):
+    """Sharding for the (steps, slots) token/done streams a decode dispatch
+    emits: slots on "data" so the hot loop ends with no gather — the host
+    assembles the (tiny) stream after the dispatch returns."""
+    spec = [None] * rank
+    if "data" in mesh.axis_names and axis_size(mesh, "data") > 1 \
+            and n_slots % axis_size(mesh, "data") == 0:
+        spec[slot_dim] = "data"
+    return NamedSharding(mesh, P(*spec))

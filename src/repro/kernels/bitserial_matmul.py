@@ -192,3 +192,55 @@ def bitserial_matmul_fused(
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(qa, pw)
+
+
+def bitserial_matmul_sharded(
+    qa: jax.Array,  # (M, K) int32 activation codes, K = KW*32
+    pw: jax.Array,  # (w_bits, N, KW) uint32 prepacked weight planes
+    *,
+    a_bits: int,
+    w_bits: int,
+    mesh,
+    axis: str = "model",
+    bm: int = 128,
+    bn: int = 128,
+    bkw: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    """Mesh-sharded Eq. 1: the paper's cross-subarray accumulation.
+
+    The packed contraction (KW uint32 words == K/32 input columns) is split
+    across mesh ``axis`` — each shard holds a contiguous group of subarray
+    rows (``core.packed.shard_packed(..., split="k")`` lays weights out this
+    way) and runs the fused single-launch kernel on its resident planes.
+    The per-shard int32 popcount partials then reduce losslessly via
+    ``distributed.collectives.exact_psum`` — the one collective this matmul
+    needs, mirroring how the paper accumulates cross-written partial sums
+    across subarrays. ``shard_map`` is required because ``pallas_call`` has
+    no GSPMD partitioning rule: under plain jit a sharded operand would
+    silently gather.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import exact_psum, shard_map_compat
+
+    m, k = qa.shape
+    _, n, kw = pw.shape
+    if k != kw * 32:
+        raise ValueError(f"K={k} does not match packed weight KW={kw}")
+    size = mesh.shape[axis]
+    if kw % size:
+        raise ValueError(
+            f"packed K words {kw} not divisible by mesh axis {axis!r}={size}")
+
+    def local(qa_l, pw_l):
+        p = bitserial_matmul_fused(qa_l, pw_l, a_bits=a_bits, w_bits=w_bits,
+                                   bm=bm, bn=bn, bkw=bkw, interpret=interpret)
+        return exact_psum(p, axis)
+
+    return shard_map_compat(
+        local, mesh,
+        in_specs=(P(None, axis), P(None, None, axis)),
+        out_specs=P(None, None),
+        check_rep=False,   # pallas_call has no replication rule
+    )(qa, pw)

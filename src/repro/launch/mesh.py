@@ -38,3 +38,32 @@ def make_test_mesh(n_devices: int | None = None):
             model = m
             break
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serve_mesh(model_par: int = 1, n_devices: int | None = None):
+    """Serving mesh ("data", "model") — the paper's chips × banks.
+
+    ``model_par`` devices per model replica (tensor/bank parallelism: the
+    "model" axis splits every projection's output columns and the
+    PackedWeight planes); the remaining ``n // model_par`` devices shard the
+    continuous-batching slot grid (the "data" axis — the paper's chips).
+    ``ServeEngine(..., mesh=make_serve_mesh(...))`` does the rest
+    (DESIGN.md §5).
+
+    CPU-only boxes: force a multi-device host *before any jax import* —
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            python -m repro.launch.serve --arch qwen3-0.6b --reduced \\
+            --model-par 2
+    """
+    devices = jax.devices()
+    n = n_devices or len(devices)
+    if n > len(devices):
+        raise RuntimeError(
+            f"need {n} devices, found {len(devices)}; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before any "
+            "jax import")
+    if model_par < 1 or n % model_par:
+        raise ValueError(f"model_par={model_par} must divide n_devices={n}")
+    return jax.make_mesh((n // model_par, model_par), ("data", "model"),
+                         devices=devices[:n])

@@ -2,6 +2,20 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 6 --max-new 16
+
+Multi-device serving maps the paper's chip→bank hierarchy onto a
+("data", "model") mesh (DESIGN.md §5): ``--model-par N`` puts N-way
+tensor/bank parallelism on the "model" axis and shards the decode-slot
+grid across the rest of the devices on "data". On a CPU-only box, force a
+multi-device host *before any jax import* (XLA reads the flag at backend
+init):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --model-par 2 --max-batch 8
+
+With a single device (and the default ``--model-par 1``) the engine runs
+exactly as before — mesh-free.
 """
 from __future__ import annotations
 
@@ -13,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_serve_mesh
 from repro.models.lm import init as model_init
 from repro.models.lm.model import cast_params
 from repro.serving import Request, SamplerConfig, ServeEngine
@@ -27,6 +42,9 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--model-par", type=int, default=1,
+                    help="devices per model replica (the mesh's 'model' "
+                    "axis); the rest shard decode slots on 'data'")
     args = ap.parse_args()
 
     arch = get_config(args.arch)
@@ -34,11 +52,17 @@ def main():
     if not cfg.embed_inputs or cfg.cross_attn_every:
         raise SystemExit("serve launcher drives token-in archs; "
                          "musicgen/vlm need frontend-stub drivers (see examples)")
+    mesh = None
+    if len(jax.devices()) > 1 or args.model_par > 1:
+        mesh = make_serve_mesh(args.model_par)
+        print(f"serving on mesh {dict(mesh.shape)} "
+              f"({len(mesh.devices.ravel())} devices)")
     params = cast_params(model_init(cfg, jax.random.PRNGKey(0)),
                          jnp.dtype(cfg.dtype))
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len,
-                      sampler=SamplerConfig(temperature=args.temperature))
+                      sampler=SamplerConfig(temperature=args.temperature),
+                      mesh=mesh)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):

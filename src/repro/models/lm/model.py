@@ -196,7 +196,7 @@ _PIM_PROJ_KEYS = frozenset({
 })
 
 
-def prepack_params(params, cfg):
+def prepack_params(params, cfg, mesh=None):
     """Quantize + pack every pim_linear projection weight exactly once.
 
     The serving-time analog of the paper's subarray programming: after this,
@@ -208,11 +208,25 @@ def prepack_params(params, cfg):
     expert banks (``moe_ffn`` contracts them via batched einsum, not
     ``pim_linear`` — their (E, d, f) shape collides with the stacked-MLP key
     names, so the whole router-bearing dict is excluded).
+
+    ``mesh``: additionally distribute the (packed or float) tree with the
+    serving shardings — every projection's output dim, and for packed
+    weights the PackedWeight planes/col_sums N dim, split across the mesh's
+    "model" axis (the paper's banks; DESIGN.md §5). Applies whether or not
+    ``cfg`` enables quantization, so the float serving path shards the same
+    way.
     """
     from repro.core.packed import prepack
 
+    def maybe_shard(tree):
+        if mesh is None:
+            return tree
+        from repro.distributed import sharding as sh
+
+        return jax.device_put(tree, sh.serve_param_shardings(tree, mesh))
+
     if cfg is None or not getattr(cfg, "enabled", False):
-        return params
+        return maybe_shard(params)
 
     def pack_leaf(leaf):
         fn = functools.partial(prepack, w_bits=cfg.w_bits)
@@ -234,7 +248,7 @@ def prepack_params(params, cfg):
             return type(p)(walk(v) for v in p)
         return p
 
-    return walk(params)
+    return maybe_shard(walk(params))
 
 
 # ---------------------------------------------------------------------------
@@ -445,8 +459,30 @@ def prefill_into_slot(params, cfg: ModelConfig, tokens, state, slot, start_pos):
     full (max_batch, max_len) state. Returns (last-token logits (1, 1, V),
     updated grid). Chunked admission calls this once per power-of-two chunk
     of the prompt, threading ``start_pos`` forward.
+
+    Mesh-sharded serving: the grid's batch axis shards on "data" and the
+    batch-1 slot slice/put crosses shards — GSPMD gathers here, which is
+    fine on the admission path. What must stay exact is the *returned*
+    grid's layout: the engine pins it with ``out_shardings`` equal to the
+    donated input shardings, so repeated admissions and the decode hot loop
+    see one stable layout and steady state never reshards (DESIGN.md §5).
     """
     s1 = _slot_take(state, slot)
-    s1["length"] = jnp.reshape(jnp.asarray(start_pos, jnp.int32), (1,))
+    # Slot reuse must not leak the previous occupant's state into the new
+    # request: KV rows are position-masked (a fresh slot's length restarts
+    # at 0, so stale rows are never attendable before they are overwritten)
+    # but recurrent carries (RG-LRU h/conv, RWKV wkv/shifts) and ring
+    # buffers are position-less — zero every leaf on a request's FIRST
+    # chunk (start_pos == 0; later chunks continue the carried state).
+    fresh = jnp.asarray(start_pos, jnp.int32) == 0
+
+    def clear(leaf):
+        return jnp.where(fresh, jnp.zeros((), leaf.dtype), leaf)
+
+    s1 = {
+        "scan": [jax.tree.map(clear, t) for t in s1["scan"]],
+        "rest": [jax.tree.map(clear, t) for t in s1["rest"]],
+        "length": jnp.reshape(jnp.asarray(start_pos, jnp.int32), (1,)),
+    }
     logits, s1 = prefill(params, cfg, tokens, s1)
     return logits, _slot_put(state, s1, slot)

@@ -38,10 +38,22 @@ PIM deployment: when ``cfg.pim`` is enabled the constructor prepacks every
 projection weight into :class:`repro.core.packed.PackedWeight` — the
 paper's program-subarrays-once step — so prefill/decode never re-calibrate,
 re-quantize or re-pack a weight (DESIGN.md §3/§4).
+
+Mesh-sharded serving (DESIGN.md §5): pass ``mesh`` (a ("data", "model")
+mesh, e.g. ``repro.launch.mesh.make_serve_mesh``) and the engine maps the
+paper's chip→bank→subarray hierarchy onto it — batch slots (chips) shard
+on "data", every projection's output columns and the PackedWeight planes
+(banks) on "model", and the bit-serial kernels tile subarrays into VMEM.
+All three hot-loop programs compile with explicit in/out shardings equal to
+the committed layouts, so under donation the steady-state decode loop never
+inserts a resharding transfer — the only collectives are the tensor-parallel
+partial-sum all-reduces and KB-scale scatter-index broadcasts (asserted on
+compiled HLO in tests/test_serve_sharded.py).
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 from functools import partial
 
@@ -86,12 +98,24 @@ def _pow2_chunks(n: int) -> list[int]:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_len: int = 512, sampler: SamplerConfig | None = None,
-                 seed: int = 0, drain_steps: int = 8):
+                 seed: int = 0, drain_steps: int = 8, mesh=None):
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None and getattr(cfg.pim, "enabled", False) \
+                and getattr(cfg.pim, "backend", "") == "pallas":
+            # pallas_call has no GSPMD partitioning rule: under plain jit the
+            # "model"-split planes would silently all-gather every step.
+            # (kernels.bitserial_matmul_sharded is the shard_map primitive
+            # for mesh-level pallas use; it is not wired into pim_linear yet.)
+            raise ValueError(
+                "mesh-sharded serving does not support pim backend 'pallas'; "
+                "use 'popcount' or 'int-direct' (both partition under GSPMD)")
         # Deployment-time weight quantize+pack, exactly once (the paper
         # programs subarrays once): every prefill/decode after this reuses
         # the PackedWeight planes — no per-call re-calibration or re-pack.
-        self.params = prepack_params(params, cfg.pim)
+        # With a mesh, the tree is committed to the serving layout here
+        # (banks = "model"-axis column split; DESIGN.md §5).
+        self.params = prepack_params(params, cfg.pim, mesh=mesh)
         self.max_batch = max_batch
         self.max_len = max_len
         self.sampler = sampler or SamplerConfig()
@@ -114,11 +138,60 @@ class ServeEngine:
         self.queue: collections.deque = collections.deque()
         self.done: list = []
 
+        # With a mesh, every hot-loop program compiles with explicit in/out
+        # shardings equal to the committed layouts: the donated state/ctrl
+        # buffers then alias in place AND keep one stable layout across
+        # calls, so steady-state decode inserts no resharding transfer
+        # (asserted on HLO in tests/test_serve_sharded.py).
+        pf_kw, ad_kw, self._dec_kw = {}, {}, {}
+        if mesh is not None:
+            from repro.distributed import sharding as _sh
+
+            p_sh = _sh.serve_param_shardings(self.params, mesh)
+            s_sh = _sh.serve_state_shardings(self.state, mesh)
+            c_sh = _sh.serve_ctrl_shardings(self.ctrl, mesh)
+            repl = _sh.replicated(mesh)
+            self.state = jax.device_put(self.state, s_sh)
+            self.ctrl = jax.device_put(self.ctrl, c_sh)
+            self._shardings = (p_sh, s_sh, c_sh)
+            stream = _sh.serve_stream_sharding(mesh, max_batch)
+            pf_kw = dict(in_shardings=(p_sh, s_sh, repl, repl, repl),
+                         out_shardings=(repl, s_sh))
+            ad_kw = dict(in_shardings=(c_sh, repl, repl, repl, repl),
+                         out_shardings=(c_sh, repl))
+            self._dec_kw = dict(in_shardings=(p_sh, s_sh, c_sh),
+                                out_shardings=(s_sh, c_sh, stream, stream))
+
         self._prefill = jax.jit(partial(self._prefill_impl, cfg),
-                                donate_argnums=(1,))
+                                donate_argnums=(1,), **pf_kw)
         self._admit_ctrl = jax.jit(partial(self._admit_impl, self.sampler),
-                                   donate_argnums=(0,))
+                                   donate_argnums=(0,), **ad_kw)
         self._decode = {}   # scan length -> jitted decode_n program
+
+    @contextlib.contextmanager
+    def _activate(self):
+        """Scope the engine's mesh to its own program calls.
+
+        The sharding module's mesh is process-global (model code stays
+        mesh-agnostic); tracing happens inside the jitted calls, so the
+        mesh — and the serving KV layout flag consumed by
+        ``constrain_kv_update`` — is activated around each call and
+        restored after, instead of leaking into every later trace in the
+        process (a mesh-free engine built afterwards must not inherit it).
+        Mesh-free engines leave the global state alone entirely."""
+        if self.mesh is None:
+            yield
+            return
+        from repro.distributed import sharding as _sh
+
+        prev_mesh, prev_serve = _sh.get_mesh(), _sh.get_serve_layout()
+        _sh.set_mesh(self.mesh)
+        _sh.set_serve_layout(True)
+        try:
+            yield
+        finally:
+            _sh.set_mesh(prev_mesh)
+            _sh.set_serve_layout(prev_serve)
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -183,7 +256,7 @@ class ServeEngine:
         fn = self._decode.get(n)
         if fn is None:
             fn = jax.jit(partial(self._decode_impl, self.cfg, self.sampler, n),
-                         donate_argnums=(1, 2))
+                         donate_argnums=(1, 2), **self._dec_kw)
             self._decode[n] = fn
         return fn
 
@@ -203,13 +276,14 @@ class ServeEngine:
             req = self.queue.popleft()
             prompt = np.asarray(req.prompt, np.int32)
             pos, logits = 0, None
-            for c in _pow2_chunks(len(prompt)):
-                tokens = jnp.asarray(prompt[pos:pos + c], jnp.int32)[None]
-                logits, self.state = self._prefill(
-                    self.params, self.state, tokens, slot, pos)
-                pos += c
-            self.ctrl, tok = self._admit_ctrl(
-                self.ctrl, logits, slot, req.eos_id, req.max_new_tokens)
+            with self._activate():
+                for c in _pow2_chunks(len(prompt)):
+                    tokens = jnp.asarray(prompt[pos:pos + c], jnp.int32)[None]
+                    logits, self.state = self._prefill(
+                        self.params, self.state, tokens, slot, pos)
+                    pos += c
+                self.ctrl, tok = self._admit_ctrl(
+                    self.ctrl, logits, slot, req.eos_id, req.max_new_tokens)
             first = int(tok)
             self.slot_out[slot] = [first]
             if req.max_new_tokens <= 1 or first == req.eos_id:
@@ -231,8 +305,9 @@ class ServeEngine:
             cap = max(1, min(self.drain_steps,
                              int(max(self.slot_remaining[i] for i in live))))
             n = 1 << (cap.bit_length() - 1)   # pow2 -> bounded compile count
-        self.state, self.ctrl, toks, dones = self._decode_fn(n)(
-            self.params, self.state, self.ctrl)
+        with self._activate():
+            self.state, self.ctrl, toks, dones = self._decode_fn(n)(
+                self.params, self.state, self.ctrl)
         toks = np.asarray(toks)
         dones = np.asarray(dones)
         for k in range(n):
@@ -287,7 +362,13 @@ class ServeEngine:
 
         like = {"state": self.state, "ctrl": self.ctrl}
         tree, manifest = ckpt.restore(ckpt_dir, like, step=step)
-        tree = jax.tree.map(jnp.asarray, tree)   # host -> device once
+        if self.mesh is not None:
+            # Commit straight to the canonical serving layout — the hot-loop
+            # programs' in_shardings reject differently-committed buffers.
+            _, s_sh, c_sh = self._shardings
+            tree = jax.device_put(tree, {"state": s_sh, "ctrl": c_sh})
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)   # host -> device once
         self.state, self.ctrl = tree["state"], tree["ctrl"]
         for i, s in enumerate(manifest["extra"]["slots"]):
             if s is None:

@@ -13,14 +13,20 @@ class SamplerConfig:
     top_k: int = 0               # 0 -> no truncation
 
 
-def sample(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
-    """logits (B, V) -> token ids (B,) int32."""
-    if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def _prep_logits(logits: jax.Array, cfg: SamplerConfig) -> jax.Array:
+    """Shared temperature scaling + top-k truncation (both samplers)."""
     l = logits.astype(jnp.float32) / cfg.temperature
     if cfg.top_k:
         kth = jax.lax.top_k(l, cfg.top_k)[0][..., -1:]
         l = jnp.where(l < kth, -jnp.inf, l)
+    return l
+
+
+def sample(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
+    """logits (B, V) -> token ids (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = _prep_logits(logits, cfg)
     return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
 
 
@@ -34,9 +40,6 @@ def sample_per_slot(logits: jax.Array, cfg: SamplerConfig, keys) -> jax.Array:
     steps share the same sum)."""
     if cfg.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    l = logits.astype(jnp.float32) / cfg.temperature
-    if cfg.top_k:
-        kth = jax.lax.top_k(l, cfg.top_k)[0][..., -1:]
-        l = jnp.where(l < kth, -jnp.inf, l)
+    l = _prep_logits(logits, cfg)
     return jax.vmap(
         lambda row, k: jax.random.categorical(k, row))(l, keys).astype(jnp.int32)

@@ -1,0 +1,268 @@
+"""Mesh-sharded serving: token parity vs the single-device engine, the
+steady-state no-resharding HLO invariant, and the shard_map bit-serial
+kernel (DESIGN.md §5).
+
+The in-process tests need a multi-device host and skip on a 1-device run;
+CI exercises them under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the mesh8 job). ``test_sharded_serving_subprocess`` always runs: it forces
+the 8-device world in a child process, so the default tier-1 suite covers
+the mesh path too.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import sharding as sh
+from repro.models.lm import ModelConfig, init
+from repro.serving import Request, SamplerConfig, ServeEngine
+
+CFG = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  vocab=61, remat="none", dtype="float32")
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture()
+def serve_mesh():
+    from repro.launch.mesh import make_serve_mesh
+
+    return make_serve_mesh(2)   # (data=4, model=2)
+
+
+def _workload(eng):
+    """Mixed prompt lengths, staggered submits, EOS mid-stream."""
+    prompts = {
+        0: np.array([3, 1, 4, 1, 5], np.int32),
+        1: np.array([7, 8], np.int32),
+        2: np.array([9, 2, 6, 5, 3, 5, 8], np.int32),
+        3: np.array([11, 12, 13], np.int32),
+        4: np.array([17, 19, 23, 29, 31, 37], np.int32),
+    }
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=6))
+    eng.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=5))
+    done = eng.step() + eng.step()
+    # rid 2 gets an eos id the greedy stream is likely to hit mid-stream; a
+    # fixed token works because parity only needs both engines to see it.
+    eng.submit(Request(rid=2, prompt=prompts[2], max_new_tokens=8, eos_id=39))
+    eng.submit(Request(rid=3, prompt=prompts[3], max_new_tokens=6))
+    eng.submit(Request(rid=4, prompt=prompts[4], max_new_tokens=4))
+    done += eng.run()
+    return {c.rid: c.tokens for c in done}
+
+
+@needs8
+def test_sharded_token_parity(params, serve_mesh):
+    """Sharded serving on a (4, 2) mesh is token-identical to the
+    single-device engine across mixed prompts, slot reuse and EOS.
+
+    The sharded engine runs FIRST: its mesh activation must be scoped to
+    its own program calls (engine._activate), so the mesh-free engine built
+    afterwards — with no defensive set_mesh(None) — must not inherit it."""
+    shard = _workload(ServeEngine(CFG, params, max_batch=4, max_len=64,
+                                  sampler=SamplerConfig(temperature=0.0),
+                                  mesh=serve_mesh))
+    assert sh.get_mesh() is None, "engine leaked its mesh into global state"
+    plain = _workload(ServeEngine(CFG, params, max_batch=4, max_len=64,
+                                  sampler=SamplerConfig(temperature=0.0)))
+    assert plain == shard
+
+
+@needs8
+def test_sharded_pim_popcount_parity(params, serve_mesh):
+    """The quantized serving path (paper dataflow, popcount backend) stays
+    bit-exact under sharding: integer popcount partials and the affine
+    correction partition without changing any arithmetic."""
+    import dataclasses
+
+    from repro.core.pim_layers import PIMQuantConfig
+
+    cfg = dataclasses.replace(
+        CFG, pim=PIMQuantConfig(w_bits=4, a_bits=4, backend="popcount"))
+    reqs = [np.array([3, 1, 4, 1, 5], np.int32), np.array([7, 8], np.int32)]
+
+    def run(mesh):
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=32,
+                          sampler=SamplerConfig(temperature=0.0), mesh=mesh)
+        for rid, p in enumerate(reqs):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4))
+        return {c.rid: c.tokens for c in eng.run()}
+
+    assert run(serve_mesh) == run(None)
+
+
+def test_pallas_backend_rejected_on_mesh(params):
+    """pallas_call has no GSPMD rule — the engine must refuse the silent
+    all-gather-every-step combination instead of running it."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (mesh8 CI job)")
+    import dataclasses
+
+    from repro.core.pim_layers import PIMQuantConfig
+    from repro.launch.mesh import make_serve_mesh
+
+    cfg = dataclasses.replace(
+        CFG, pim=PIMQuantConfig(w_bits=4, a_bits=4, backend="pallas"))
+    with pytest.raises(ValueError, match="pallas"):
+        ServeEngine(cfg, params, max_batch=4, max_len=32,
+                    mesh=make_serve_mesh(2))
+
+
+# -- steady-state HLO invariant ---------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8}
+
+
+def _gather_sizes(txt):
+    """Byte size of every all-gather result in an HLO text dump."""
+    out = []
+    for m in re.finditer(r"= (\w+)\[([\d,]*)\][^a-zA-Z]*all-gather", txt):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES.get(m.group(1), 4))
+    return out
+
+
+def _collective_counts(txt):
+    return {op: len(re.findall(r"= \S+ " + op.replace("-", "[-]") + r"\(",
+                               txt))
+            for op in ("all-gather", "all-reduce", "all-to-all",
+                       "collective-permute")}
+
+
+@needs8
+def test_decode_hlo_no_resharding(params, serve_mesh):
+    """Steady-state decode must keep its operands resident: no large
+    all-gather (nothing KV-cache- or weight-sized crosses shards), no
+    all-to-all, and the collective count flat in the scan length — the only
+    per-step collectives are the TP partial-sum all-reduces and KB-scale
+    scatter-index broadcasts. Input and output shardings of the donated
+    state/ctrl are identical, so repeated calls never reshard."""
+    eng = ServeEngine(CFG, params, max_batch=8, max_len=64,
+                      sampler=SamplerConfig(temperature=0.0), mesh=serve_mesh)
+    counts = {}
+    for n in (1, 8):
+        with eng._activate():   # trace under the mesh, like the hot loop
+            txt = (eng._decode_fn(n)
+                   .lower(eng.params, eng.state, eng.ctrl).compile().as_text())
+        big = [s for s in _gather_sizes(txt) if s > 16384]
+        assert not big, f"large all-gather in steady-state decode: {big}"
+        counts[n] = _collective_counts(txt)
+        assert counts[n]["all-to-all"] == 0, counts[n]
+    assert counts[1] == counts[8], (
+        "collective count must be flat in the drain length", counts)
+
+    # No inter-call resharding: run a real step and compare layouts.
+    eng.submit(Request(rid=0, prompt=np.array([5, 6, 7], np.int32),
+                       max_new_tokens=4))
+    eng._admit()
+    before = jax.tree.map(lambda l: l.sharding, eng.state)
+    eng.step()
+    after = jax.tree.map(lambda l: l.sharding, eng.state)
+    assert before == after
+
+
+# -- shard_map bit-serial kernel --------------------------------------------
+
+def test_bitserial_matmul_sharded_parity():
+    """Cross-subarray accumulation: KW split across "model", per-shard fused
+    kernels, exact int32 psum — bit-identical to the single-device kernel."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (mesh8 CI job)")
+    from repro.core.packed import prepack, shard_packed
+    from repro.kernels.bitserial_matmul import (
+        bitserial_matmul_fused, bitserial_matmul_sharded,
+    )
+    from repro.launch.mesh import make_serve_mesh
+
+    mesh = make_serve_mesh(2)
+    rng = np.random.default_rng(0)
+    qa = jnp.asarray(rng.integers(0, 16, size=(16, 128)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((128, 32)), jnp.float32)
+    pw = prepack(w, 4)
+    want = bitserial_matmul_fused(qa, pw.planes, a_bits=4, w_bits=4,
+                                  interpret=True)
+    pws = shard_packed(pw, mesh, axis="model", split="k")
+    # split="k" distributes the packed contraction words across the axis
+    assert pws.planes.sharding.spec == jax.sharding.PartitionSpec(
+        None, None, "model")
+    got = bitserial_matmul_sharded(qa, pws.planes, a_bits=4, w_bits=4,
+                                   mesh=mesh, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# -- always-run subprocess coverage -----------------------------------------
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, re, sys
+import jax, numpy as np
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_serve_mesh
+from repro.models.lm import ModelConfig, init
+from repro.serving import Request, SamplerConfig, ServeEngine
+
+cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  vocab=61, remat="none", dtype="float32")
+params = init(cfg, jax.random.PRNGKey(0))
+prompts = [np.array([3, 1, 4, 1, 5], np.int32), np.array([7, 8], np.int32),
+           np.array([9, 2, 6, 5, 3], np.int32)]
+
+def run(mesh):
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=32, drain_steps=4,
+                      sampler=SamplerConfig(temperature=0.0), mesh=mesh)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=5))
+    return eng, {c.rid: c.tokens for c in eng.run()}
+
+# sharded first: the mesh must stay scoped to the engine's own calls, so
+# the mesh-free engine after it decodes on an untouched global state
+eng, shard = run(make_serve_mesh(2))
+assert sh.get_mesh() is None, "engine leaked its mesh"
+_, plain = run(None)
+with eng._activate():
+    txt = (eng._decode_fn(4)
+           .lower(eng.params, eng.state, eng.ctrl).compile().as_text())
+big = []
+for m in re.finditer(r"= (\w+)\[([\d,]*)\][^a-zA-Z]*all-gather", txt):
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    if n * 4 > 16384:
+        big.append(m.group(0))
+print(json.dumps({"parity": plain == shard, "big_gathers": big}))
+"""
+
+
+def test_sharded_serving_subprocess():
+    """Tier-1 coverage without a multi-device parent: force 8 host devices
+    in a child process and check parity + the no-large-gather invariant."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True, env=env, cwd=_REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["parity"], res
+    assert not res["big_gathers"], res

@@ -134,6 +134,30 @@ def test_prefill_bucketing_bounds_compiles(setup):
     assert n_decode <= int(math.log2(eng.drain_steps)) + 1
 
 
+def test_slot_reuse_no_recurrent_state_leak():
+    """Regression: recurrent carries (RG-LRU h/conv — position-less state,
+    unlike position-masked KV rows) must be zeroed when a released slot is
+    reused, or request B's prefill runs with request A's final hidden state
+    and B's logits depend on which slot it landed in. Asserted on logits
+    (the leak's perturbation is real but small enough that greedy argmax
+    can mask it on a lucky prompt)."""
+    from repro.models.lm import init_state, prefill_into_slot
+
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                      d_ff=64, vocab=51, remat="none", dtype="float32",
+                      block_pattern=("rglru",))
+    params = init(cfg, jax.random.PRNGKey(1))
+    prompt_a = jnp.asarray([[9, 2, 6, 5]], jnp.int32)
+    prompt_b = jnp.asarray([[3, 1, 4, 1, 5]], jnp.int32)
+
+    dirty = init_state(cfg, 2, 64)
+    _, dirty = prefill_into_slot(params, cfg, prompt_a, dirty, 0, 0)
+    got, _ = prefill_into_slot(params, cfg, prompt_b, dirty, 0, 0)  # reuse
+    want, _ = prefill_into_slot(params, cfg, prompt_b,
+                                init_state(cfg, 2, 64), 0, 0)       # fresh
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_sampling_keys_advance_across_steps(setup):
     """Regression for the decode-sampling PRNG bug: the old key derivation
     ``PRNGKey(slot_pos.sum())`` repeats whenever a later request replays the

@@ -77,6 +77,30 @@ def test_divisibility_guard_drops_axes():
     assert specs["embed"] == P(None, "data")
 
 
+def test_divisibility_guard_warns_once(caplog):
+    """A dropped rule axis must be visible (warn), but exactly once per
+    (leaf, axis, dim) — the guard runs per tree leaf, so an unthrottled
+    warning would flood a misconfigured-mesh launch."""
+    mesh = _mesh_stub((16, 16), ("data", "model"))
+    sh.reset_drop_warnings()
+    with caplog.at_level("WARNING", logger="repro.distributed.sharding"):
+        spec = sh._guard(("model",), (61,), mesh, label="serve-param:head")
+        assert spec == P(None)
+        sh._guard(("model",), (61,), mesh, label="serve-param:head")  # dup
+    drops = [r for r in caplog.records if "dropping to replication" in r.message]
+    assert len(drops) == 1, [r.message for r in drops]
+    assert "serve-param:head" in drops[0].message
+    with caplog.at_level("WARNING", logger="repro.distributed.sharding"):
+        caplog.clear()
+        # axis of size 1 (or absent) is not a misconfiguration: no warning
+        sh._guard(("model",), (61,), _mesh_stub((16, 1), ("data", "model")),
+                  label="x")
+        sh._guard(("missing",), (61,), mesh, label="x")
+    assert not [r for r in caplog.records
+                if "dropping to replication" in r.message]
+    sh.reset_drop_warnings()
+
+
 def test_multipod_fsdp_spans_pods():
     mesh = _mesh_stub((2, 16, 16), ("pod", "data", "model"))
     cfg = get_config("llama3.2-3b").model
