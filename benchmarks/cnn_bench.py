@@ -1,0 +1,115 @@
+"""CNN serving benchmark: batched vision-engine throughput/latency sweep.
+
+The paper's headline metric is CNN inference throughput (Table 3 FPS,
+Figs. 14-15 precision sweeps); this module measures the serving-path analog
+on the vision engine: images/sec across micro-batch bucket sizes, ⟨W:I⟩
+precisions and models, against the unbatched per-image dispatch loop the
+pre-engine example used (``VisionEngine(max_batch=1)`` — same prepacked
+weights and jitted forward, one image per dispatch). Every cell serves the
+same image set, so the sweep isolates exactly what batching buys:
+dispatch-count amortization and batched GEMM efficiency.
+
+``cnn_sim_crosscheck`` feeds the measured rows through
+``repro.pim.calibrate.crosscheck_measured``: the same (model, image, ⟨W:I⟩)
+cells priced on the calibrated NAND-SPIN simulator, with the measured/
+simulated fps ratio recorded as a tracked trajectory (the engine measures
+the reproduction, the simulator prices the paper's hardware).
+
+``benchmarks.run --only cnn`` renders both tables and writes
+``BENCH_cnn.json`` at the repo root; ``--smoke`` shrinks to CI scale with
+the same artifact shape.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.serving import VisionEngine, VisionRequest
+from repro.serving.vision import MODEL_ZOO as _MODULES
+
+# Throughput rows of the last cnn_throughput() call, reused by the
+# simulator cross-check so one benchmark run measures each cell once.
+_last_rows: list = []
+
+
+def _measure(params, model, image, precision, batch, n_images,
+             backend="int-direct", repeats=2):
+    """Images/sec serving ``n_images`` through max_batch=``batch`` buckets.
+
+    One warm run populates the prepack + compile caches; the timed runs
+    then measure the serving path. Returns (img_s, ms_per_image).
+    """
+    eng = VisionEngine({model: params}, backend=backend, max_batch=batch)
+    rng = np.random.default_rng(0)
+    imgs = rng.standard_normal((n_images, image, image, 3)).astype(np.float32)
+
+    def serve():
+        for rid in range(n_images):
+            eng.submit(VisionRequest(rid=rid, image=imgs[rid], model=model,
+                                     precision=precision))
+        return eng.run()
+
+    serve()                                   # warm: prepack + compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        done = serve()
+    dt = (time.perf_counter() - t0) / repeats
+    assert len(done) == n_images
+    return n_images / dt, dt / n_images * 1e3
+
+
+def cnn_throughput(smoke: bool = False):
+    """img/s + per-image latency across (model, precision, bucket size)."""
+    if smoke:
+        cells = [("alexnet", 64)]
+        precisions = ["<8:8>"]
+        batches = [1, 8]
+        n_images = 8
+    else:
+        cells = [("alexnet", 64), ("resnet50", 32)]
+        precisions = ["<4:4>", "<8:8>"]
+        batches = [1, 2, 4, 8]
+        n_images = 16
+    rows = []
+    for model, image in cells:
+        params = _MODULES[model].init(jax.random.PRNGKey(0), image=image,
+                                      num_classes=16)
+        for precision in precisions:
+            base = None
+            for b in batches:
+                img_s, ms = _measure(params, model, image, precision, b,
+                                     n_images)
+                if base is None:
+                    base = img_s
+                rows.append({
+                    "model": model, "image": image, "precision": precision,
+                    "batch": b, "n_images": n_images,
+                    "img_s": round(img_s, 2), "ms_per_image": round(ms, 2),
+                    "speedup_vs_unbatched": round(img_s / base, 2),
+                })
+    _last_rows[:] = rows
+    return rows
+
+
+def cnn_sim_crosscheck(smoke: bool = False):
+    """Measured engine fps vs calibrated NAND-SPIN simulator fps."""
+    from repro.pim.calibrate import crosscheck_measured
+
+    rows = _last_rows
+    if not rows:                    # --only filtered out the throughput run
+        params = _MODULES["alexnet"].init(jax.random.PRNGKey(0), image=64,
+                                          num_classes=16)
+        n = 8 if smoke else 16
+        img_s, _ = _measure(params, "alexnet", 64, "<8:8>", 8, n)
+        rows = [{"model": "alexnet", "image": 64, "precision": "<8:8>",
+                 "batch": 8, "img_s": round(img_s, 2)}]
+    # One cross-check row per (model, precision): the largest bucket is the
+    # serving configuration; smaller buckets only quantify batching.
+    best = {}
+    for r in rows:
+        key = (r["model"], r["precision"])
+        if key not in best or r["batch"] > best[key]["batch"]:
+            best[key] = r
+    return crosscheck_measured(list(best.values()))

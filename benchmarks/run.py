@@ -39,12 +39,16 @@ def main(argv=None):
                     help="CI-scale serving benchmark (same artifact shape)")
     args = ap.parse_args(argv)
 
-    from . import kernel_bench, lm_roofline, paper_figures, serve_bench
+    from . import cnn_bench, kernel_bench, lm_roofline, paper_figures, serve_bench
 
     serve_throughput = functools.partial(serve_bench.serve_throughput,
                                          smoke=args.smoke)
     serve_scaling = functools.partial(serve_bench.serve_device_scaling,
                                       smoke=args.smoke)
+    cnn_throughput = functools.partial(cnn_bench.cnn_throughput,
+                                       smoke=args.smoke)
+    cnn_crosscheck = functools.partial(cnn_bench.cnn_sim_crosscheck,
+                                       smoke=args.smoke)
     sections = [
         ("fig13a: capacity sweep", paper_figures.fig13a_capacity_sweep),
         ("fig13b: bandwidth sweep", paper_figures.fig13b_bandwidth_sweep),
@@ -66,6 +70,10 @@ def main(argv=None):
         ("serve: engine throughput (legacy vs fused hot loop)", serve_throughput),
         ("serve: device-count scaling (chips=data x banks=model mesh)",
          serve_scaling),
+        ("cnn: vision engine throughput (batch x precision x model)",
+         cnn_throughput),
+        ("cnn: measured vs simulated fps (pim.calibrate cross-check)",
+         cnn_crosscheck),
     ]
     # Kernel sections feeding BENCH_kernels.json (rows reused, not re-run).
     json_keys = {
@@ -76,6 +84,7 @@ def main(argv=None):
     }
     payload = {}
     serve_payload = {}
+    cnn_payload = {}
     t0 = time.time()
     failures = []
     for title, fn in sections:
@@ -90,14 +99,21 @@ def main(argv=None):
                 serve_payload["serve_throughput"] = rows
             elif fn is serve_scaling:
                 serve_payload["device_scaling"] = rows
+            elif fn is cnn_throughput:
+                cnn_payload["throughput"] = rows
+            elif fn is cnn_crosscheck:
+                cnn_payload["sim_crosscheck"] = rows
             if serve_payload:
                 serve_payload["smoke"] = args.smoke
+            if cnn_payload:
+                cnn_payload["smoke"] = args.smoke
         except Exception as e:  # keep the suite running; report at the end
             failures.append((title, repr(e)))
             print(f"\n== {title} FAILED: {e!r}")
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for data, name in ((payload, "BENCH_kernels.json"),
-                       (serve_payload, "BENCH_serving.json")):
+                       (serve_payload, "BENCH_serving.json"),
+                       (cnn_payload, "BENCH_cnn.json")):
         if not data:
             continue
         path = os.path.join(repo_root, name)

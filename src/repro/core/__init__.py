@@ -18,7 +18,6 @@ from .pim_layers import (
     pim_linear,
     prepack_conv2d,
     prepack_linear,
-    prepack_weights,
 )
 from .quantize import (
     QuantParams,
@@ -38,6 +37,6 @@ __all__ = [
     "int_matmul", "int_matmul_prepacked", "quantized_matmul",
     "PackedConvWeight", "PackedWeight", "prepack", "prepack_conv",
     "PIMQuantConfig", "fuse_conv_heuristic", "pim_conv2d", "pim_linear",
-    "prepack_conv2d", "prepack_linear", "prepack_weights",
+    "prepack_conv2d", "prepack_linear",
     "SubarrayPlan", "TilePlan", "plan_matmul", "plan_subarrays",
 ]

@@ -107,20 +107,26 @@ def prepack(w: jax.Array, w_bits: int, mesh=None, axis: str = "model",
     return out
 
 
-def shard_packed(pw: PackedWeight, mesh, axis: str = "model",
-                 split: str = "n") -> PackedWeight:
-    """Distribute a :class:`PackedWeight` across a device mesh.
+def shard_packed(pw: PackedWeight | PackedConvWeight, mesh,
+                 axis: str = "model", split: str = "n"):
+    """Distribute a :class:`PackedWeight`/:class:`PackedConvWeight` across a
+    device mesh.
 
     ``split="n"`` — the paper's *bank* mapping: output columns are dealt
     out across ``axis`` (planes split on their N dim, along with codes and
     the correction ``col_sums``); each shard's matmul is complete for its
-    columns, no reduction needed.
+    columns, no reduction needed. For a conv weight this is the
+    output-channel (O) split: the im2col ``mat`` splits on its N dim AND
+    the ``fused_planes`` on their O dim — both lowering paths land the same
+    output channels on the same shard.
 
     ``split="k"`` — the *subarray-group* mapping: the packed contraction
     words split across ``axis`` (planes on KW, codes on K); each shard
     produces int32 partial sums that must reduce via
     ``distributed.collectives.exact_psum`` (see
-    ``kernels.bitserial_matmul.bitserial_matmul_sharded``).
+    ``kernels.bitserial_matmul.bitserial_matmul_sharded``). Conv weights
+    only support the bank split: their contraction dim (KH*KW*C) has no
+    aligned per-kernel-row decomposition across shards.
 
     Dims that do not divide the axis stay replicated via the sharding-rule
     guard — which warns once per drop, so a "bank-sharded" deployment that
@@ -133,6 +139,20 @@ def shard_packed(pw: PackedWeight, mesh, axis: str = "model",
 
     if split not in ("n", "k"):
         raise ValueError(f"split {split!r}: want 'n' (banks) | 'k' (subarrays)")
+    if isinstance(pw, PackedConvWeight):
+        if split != "n":
+            raise ValueError(
+                "PackedConvWeight shards on the bank (output-channel) "
+                "mapping only; split='k' has no conv layout")
+        fused_spec = _guard((None, None, axis, None, None),
+                            pw.fused_planes.shape, mesh,
+                            label="shard_packed:fused_planes")
+        return PackedConvWeight(
+            mat=shard_packed(pw.mat, mesh, axis=axis, split="n"),
+            fused_planes=jax.device_put(
+                pw.fused_planes, NamedSharding(mesh, fused_spec)),
+            kernel_shape=pw.kernel_shape,
+        )
 
     def put(leaf, spec, field):
         stack = leaf.ndim - len(spec)          # 1 when vmap-prepacked

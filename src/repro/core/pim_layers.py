@@ -172,7 +172,7 @@ def pim_conv2d(
             x, wf.astype(x.dtype), (stride, stride), [(padding, padding)] * 2,
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         )
-        return y + b if b is not None else y
+        return y + b.astype(y.dtype) if b is not None else y
     if train:
         wf = w.to_float() if packed else w
         cols, oh, ow = _im2col(x, kh, kw, stride, padding)
@@ -180,11 +180,23 @@ def pim_conv2d(
         return y.reshape(x.shape[0], oh, ow, o)
 
     # -- quantized inference: one calibrate+quantize, two lowering paths ----
+    from repro.distributed import sharding as _sh
+
+    # Under the CNN serving layout (VisionEngine on a mesh) the bank
+    # redistribution between two O-split convs happens here, on the input
+    # map — never on the patch matrix (DESIGN.md §6); identity otherwise.
+    x = _sh.constrain_cnn_conv_input(x)
     n = x.shape[0]
-    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
-    aq = calibrate_minmax(xp, cfg.a_bits)
-    qx = quantize(xp, aq)          # float-zero padding becomes its Eq. 2 code
-    hp, wp = xp.shape[1], xp.shape[2]
+    # Calibrate on the REAL activations, not the padded tensor: calibrating
+    # on the padded map stretched a strictly-positive range (post-ReLU
+    # features) down to the padding zeros, wasting code space on values
+    # that never occur. Padding enters as the zero CODE — which contributes
+    # nothing to P or Sa — and the affine correction below charges padded
+    # taps exactly zero, so border semantics stay exact for any input range.
+    aq = calibrate_minmax(x, cfg.a_bits)
+    qx = jnp.pad(quantize(x, aq),
+                 ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    hp, wp = qx.shape[1], qx.shape[2]
     oh = (hp - kh) // stride + 1
     ow = (wp - kw) // stride + 1
     if not packed:
@@ -211,20 +223,31 @@ def pim_conv2d(
     sa = jax.lax.reduce_window(
         qx.sum(-1), jnp.int32(0), jax.lax.add, (1, kh, kw),
         (1, stride, stride), "VALID")
-    y = affine_correction(p, sa[..., None], w.mat.col_sums, kh * kw * c,
+    if padding:
+        # Padded taps contribute exactly zero to the dot product, so near
+        # the border the correction's weight-code sum Sw and contraction
+        # length K shrink per patch: a validity-mask pass computes both —
+        # one (1, Hp, Wp, 1) x (KH, KW, 1, O) conv against the per-tap
+        # channel-summed weight codes and one box count, both trivial next
+        # to the conv itself. Interior patches recover col_sums / K*K*C.
+        mask = jnp.pad(jnp.ones((1, x.shape[1], x.shape[2], 1), jnp.float32),
+                       ((0, 0), (padding, padding), (padding, padding),
+                        (0, 0)))
+        wsum = w.mat.codes.reshape(kh, kw, c, o).sum(2)          # (KH, KW, O)
+        sw = jax.lax.conv_general_dilated(
+            mask, wsum[:, :, None, :].astype(jnp.float32),
+            (stride, stride), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))          # (1,OH,OW,O)
+        k_real = c * jax.lax.reduce_window(
+            mask[..., 0], 0.0, jax.lax.add, (1, kh, kw),
+            (1, stride, stride), "VALID")[..., None]             # (1,OH,OW,1)
+    else:
+        sw, k_real = w.mat.col_sums, kh * kw * c
+    y = affine_correction(p, sa[..., None], sw, k_real,
                           aq, w.wq).astype(x.dtype)
+    # Pin the output to the bank split (O on "model") so each shard computes
+    # exactly its own output channels; identity off the CNN serving layout.
+    y = _sh.constrain_cnn_conv_output(y)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
-
-
-def prepack_weights(w: jax.Array, cfg: PIMQuantConfig):
-    """Legacy deployment helper: quantize weights once.
-
-    Returns (codes, QuantParams) for reuse with
-    ``bitserial.quantized_matmul(..., wq=wq, qw=codes)``. New code should
-    use :func:`prepack_linear`/:func:`prepack_conv2d`, which also pack the
-    bit-planes and precompute the correction sums.
-    """
-    wq = calibrate_minmax(w, cfg.w_bits)
-    return quantize(w, wq), wq

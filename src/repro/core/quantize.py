@@ -101,16 +101,22 @@ def fold_batchnorm(gamma, beta, mean, var, eps=1e-5):
 def affine_correction(
     prod: jax.Array,  # integer matmul P = qa @ qw, shape (..., N)
     sa: jax.Array,  # row-sums of qa along K, shape (..., 1)
-    sw: jax.Array,  # col-sums of qw along K, shape (N,)
-    k: int,
+    sw: jax.Array,  # col-sums of qw along K, (N,) or broadcastable (..., N)
+    k,              # contraction length: int, or broadcastable (..., 1) array
     aq: QuantParams,
     wq: QuantParams,
 ) -> jax.Array:
-    """Recover the float dot product from integer pieces (module docstring)."""
+    """Recover the float dot product from integer pieces (module docstring).
+
+    ``sw`` and ``k`` may vary per output position (broadcastable arrays):
+    a spatially-padded convolution treats padded taps as contributing
+    *exactly zero*, so near borders the effective weight-code sum and the
+    effective contraction length shrink per patch (see ``pim_conv2d``).
+    """
     p = prod.astype(jnp.float32)
     return (
         aq.scale * wq.scale * p
         + aq.scale * wq.qmin * sa.astype(jnp.float32)
         + wq.scale * aq.qmin * sw.astype(jnp.float32)
-        + float(k) * aq.qmin * wq.qmin
+        + jnp.asarray(k, jnp.float32) * aq.qmin * wq.qmin
     )

@@ -33,11 +33,25 @@ _log = logging.getLogger(__name__)
 _MESH: Mesh | None = None
 _TIED = False
 _SERVE_LAYOUT = False
+_CNN_SERVE_LAYOUT = False
 
 
 def set_mesh(mesh: Mesh | None):
     global _MESH
     _MESH = mesh
+
+
+def set_cnn_serve_layout(on: bool):
+    """Select the CNN serving layout (conv banks on "model", DESIGN.md §6)
+    for the at-use constraints ``constrain_cnn_conv_input``/``_output``
+    inside ``pim_conv2d``. ``VisionEngine`` scopes this (with the mesh)
+    around its forward calls; training/dry-run traces never see it."""
+    global _CNN_SERVE_LAYOUT
+    _CNN_SERVE_LAYOUT = bool(on)
+
+
+def get_cnn_serve_layout() -> bool:
+    return _CNN_SERVE_LAYOUT
 
 
 def set_serve_layout(on: bool):
@@ -437,6 +451,124 @@ def serve_ctrl_shardings(ctrl_tree, mesh: Mesh):
         return _guard(("data",), leaf.shape, mesh, label=f"serve-ctrl:{name}")
     return jax.tree_util.tree_map_with_path(
         lambda p, l: NamedSharding(mesh, spec(p, l)), ctrl_tree)
+
+
+# ---------------------------------------------------------------------------
+# CNN serving rules (mesh-sharded VisionEngine — DESIGN.md §6)
+# ---------------------------------------------------------------------------
+# Same chip→bank mapping as the LM rules, applied to the conv stack:
+#
+#   chips     -> "data"  axis: the micro-batch bucket (image batch dim)
+#   banks     -> "model" axis: output channels O of every conv / N of every
+#                FC — for prepacked weights the PackedConvWeight.mat planes,
+#                codes, col_sums AND the fused per-kernel-row planes all
+#                split on their O dim, so the fused kernel's weight slab and
+#                the materialized path's column split agree
+#
+# Per-channel BN/bias vectors ride "model" with the conv output, so the
+# affine+ReLU epilogue is shard-local. The next conv contracts over the
+# O-sharded channels: the partial-sum all-reduce is the inherent TP
+# collective (the paper's cross-bank accumulation) — nothing weight- or
+# activation-map-sized ever gathers in steady state.
+
+def constrain_cnn_conv_input(x):
+    """Pin a conv input (B, H, W, C) to batch-on-"data", channels
+    replicated, under the CNN serving layout (identity otherwise).
+
+    Between two bank-split convs the activation must redistribute (the
+    previous layer's O shards are the next layer's contraction channels) —
+    the paper pays the same movement in its *transfer* phase. Constraining
+    the INPUT map forces GSPMD to move the (B, H, W, C) activation, never
+    the KH*KW-times-larger patch matrix it otherwise gathers after im2col
+    (the reshape cannot carry a minor-dim channel sharding, so the whole
+    patch matrix replicates in one gather)."""
+    if _MESH is None or not _CNN_SERVE_LAYOUT or x.ndim != 4:
+        return x
+    dp = dp_axes(_MESH)
+    b_ok = dp and x.shape[0] % axis_size(_MESH, *dp) == 0
+    spec = P(dp if b_ok else None, None, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def constrain_cnn_conv_output(y):
+    """Pin a conv output (B, OH, OW, O) to the bank split — O on "model" —
+    under the CNN serving layout (identity otherwise). With the input map
+    replicated per shard, each bank then computes exactly its own output
+    channels from the resident weight planes: the matmul itself needs no
+    collective, and the per-channel BN/ReLU epilogue stays shard-local."""
+    if _MESH is None or not _CNN_SERVE_LAYOUT or y.ndim != 4:
+        return y
+    dp = dp_axes(_MESH)
+    b_ok = dp and y.shape[0] % axis_size(_MESH, *dp) == 0
+    tp = axis_size(_MESH, "model")
+    o_ok = tp > 1 and y.shape[-1] % tp == 0
+    spec = P(dp if b_ok else None, None, None, "model" if o_ok else None)
+    return jax.lax.with_sharding_constraint(y, NamedSharding(_MESH, spec))
+
+
+def _serve_cnn_param_spec(path, leaf, mesh: Mesh) -> P:
+    attrs = [k.name for k in path if hasattr(k, "name")]
+    dicts = [k.key for k in path if hasattr(k, "key")]
+    name = dicts[-1] if dicts else ""
+    if not hasattr(leaf, "ndim"):
+        return P()
+    if attrs:
+        # Inside a PackedWeight / PackedConvWeight: split every
+        # representation of the weight on its output-channel dim.
+        field = attrs[-1]
+        if field == "codes":            # (K, O)
+            spec = (None, "model")
+        elif field == "planes":         # (bits, O, KW)
+            spec = (None, "model", None)
+        elif field == "col_sums":       # (O,)
+            spec = ("model",)
+        elif field == "fused_planes":   # (KH, bits, O, KW, CW)
+            spec = (None, None, "model", None, None)
+        else:                           # QuantParams scale/qmin
+            return P(*(None,) * leaf.ndim)
+    elif name in ("b", "gamma", "beta", "mean", "var") and leaf.ndim == 1:
+        spec = ("model",)               # per-output-channel epilogue vectors
+    else:
+        return P(*(None,) * leaf.ndim)
+    return _guard(tuple(spec), leaf.shape, mesh, label=f"serve-cnn:{name}")
+
+
+def serve_cnn_param_shardings(params_tree, mesh: Mesh, quantized: bool = True):
+    """CNN serving shardings (DESIGN.md §6).
+
+    ``quantized=True`` (a prepacked tree): every representation of every
+    conv/fc weight — ``PackedConvWeight.mat`` codes/planes/col_sums, the
+    ``fused_planes``, FC ``PackedWeight`` leaves — splits on its
+    output-channel dim (the paper's banks on "model"), along with the
+    per-channel BN/bias epilogue vectors.
+
+    ``quantized=False`` (float masters): everything replicates and serving
+    is data-parallel only. The bank split is a property of the *bit-serial*
+    deployment: its integer partials stay exact under any partitioning,
+    while splitting a float contraction would reorder partial sums and
+    break the engine's bit-identity contract with ``model.apply``."""
+    if not quantized:
+        return jax.tree.map(lambda l: NamedSharding(mesh, P()), params_tree)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, _serve_cnn_param_spec(p, l, mesh)),
+        params_tree)
+
+
+def serve_cnn_batch_sharding(mesh: Mesh, batch: int, rank: int = 4):
+    """Image micro-batch (B, H, W, C): batch on "data" (the paper's chips)
+    when the bucket divides the axis, else replicated."""
+    spec = [None] * rank
+    if "data" in mesh.axis_names and axis_size(mesh, "data") > 1 \
+            and batch % axis_size(mesh, "data") == 0:
+        spec[0] = "data"
+    return NamedSharding(mesh, P(*spec))
+
+
+def serve_cnn_logits_sharding(mesh: Mesh, batch: int):
+    """Engine forward output (B, classes): batch stays on "data"; the class
+    dim is host-bound (top-1 / completion assembly) and small, so it is
+    never worth sharding."""
+    return serve_cnn_batch_sharding(mesh, batch, rank=2)
 
 
 def serve_stream_sharding(mesh: Mesh, n_slots: int, rank: int = 2,

@@ -13,7 +13,8 @@ Layouts (built by :func:`repro.kernels.ops.conv2d_bitserial`):
 
   pa  (a_bits, N*Hp, Wp, CW) uint32 — activation codes packed along C
       (CW = ceil(C/32) words); spatial padding applied beforehand with the
-      code of float zero, so patches match the materialized path bit-exactly.
+      ZERO code (which ANDs to zero popcount — padded taps contribute
+      nothing to P), so patches match the materialized path bit-exactly.
   pw  (KH, w_bits, O, KW, CW) uint32 — per-kernel-row weight planes
       (``PackedConvWeight.fused_planes``).
   out (N*OH, OW, O) int32 — P tiles; the (OW, bo) accumulator stays in VMEM
@@ -31,6 +32,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _pad_o_blocks(o: int, bo: int) -> tuple[int, int]:
+    """Output-channel tiling: pick the block and the zero-padding of O.
+
+    The old fallback shrank ``bo`` until it divided O, which degenerates to
+    ``bo = 1`` for prime O (an O-sized grid of tiny kernels). Instead keep
+    the requested block and pad O up to the next multiple — zero weight
+    planes AND to zero popcounts, so the padded columns cost one wasted tile
+    and are sliced off after the call.
+    """
+    bo = min(bo, o)
+    return bo, -o % bo
 
 
 def _kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int, kw_sz: int,
@@ -75,11 +89,12 @@ def conv2d_bitserial_fused(
         raise ValueError(f"pa rows {rows} != n*hp {n * hp}")
     if wp < (ow - 1) * stride + kw_sz:
         raise ValueError(f"padded width {wp} too small for ow={ow}")
-    bo = min(bo, o)
-    while o % bo:
-        bo -= 1
+    bo, o_pad = _pad_o_blocks(o, bo)
+    if o_pad:
+        pw = jnp.pad(pw, ((0, 0), (0, 0), (0, o_pad), (0, 0), (0, 0)))
+    op = o + o_pad
 
-    grid = (n * oh, o // bo, kh)
+    grid = (n * oh, op // bo, kh)
     kern = functools.partial(_kernel, a_bits=a_bits, w_bits=w_bits,
                              kw_sz=kw_sz, ow=ow, stride=stride, cw=cw, bo=bo)
     out = pl.pallas_call(
@@ -96,7 +111,9 @@ def conv2d_bitserial_fused(
                          lambda i, j, k: (k, 0, j, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, ow, bo), lambda i, j, k: (i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((n * oh, ow, o), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((n * oh, ow, op), jnp.int32),
         interpret=interpret,
     )(pa, pw)
+    if o_pad:
+        out = out[..., :o]
     return out.reshape(n, oh, ow, o)

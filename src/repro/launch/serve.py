@@ -3,18 +3,25 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 6 --max-new 16
 
+``--workload cnn`` drives the batched *vision* engine instead (the paper's
+own workload): random images through the prepacked bit-serial conv path in
+power-of-two micro-batch buckets —
+
+  PYTHONPATH=src python -m repro.launch.serve --workload cnn \
+      --cnn-model resnet50 --image 64 --requests 16 --precision '<8:8>'
+
 Multi-device serving maps the paper's chip→bank hierarchy onto a
-("data", "model") mesh (DESIGN.md §5): ``--model-par N`` puts N-way
+("data", "model") mesh (DESIGN.md §5/§6): ``--model-par N`` puts N-way
 tensor/bank parallelism on the "model" axis and shards the decode-slot
-grid across the rest of the devices on "data". On a CPU-only box, force a
-multi-device host *before any jax import* (XLA reads the flag at backend
-init):
+grid (LM) or the image micro-batch (CNN) across the rest of the devices on
+"data". On a CPU-only box, force a multi-device host *before any jax
+import* (XLA reads the flag at backend init):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --model-par 2 --max-batch 8
 
-With a single device (and the default ``--model-par 1``) the engine runs
+With a single device (and the default ``--model-par 1``) the engines run
 exactly as before — mesh-free.
 """
 from __future__ import annotations
@@ -31,11 +38,48 @@ from repro.launch.mesh import make_serve_mesh
 from repro.models.lm import init as model_init
 from repro.models.lm.model import cast_params
 from repro.serving import Request, SamplerConfig, ServeEngine
+from repro.serving.vision import MODEL_ZOO
+
+CNN_MODELS = tuple(sorted(MODEL_ZOO))
+
+
+def serve_cnn(args, mesh):
+    """Vision workload: micro-batched CNN inference (DESIGN.md §6)."""
+    from repro.serving import VisionEngine, VisionRequest
+
+    module = MODEL_ZOO[args.cnn_model]
+    params = module.init(jax.random.PRNGKey(0), image=args.image,
+                         num_classes=args.classes)
+    eng = VisionEngine({args.cnn_model: params}, backend=args.backend,
+                       max_batch=args.max_batch, mesh=mesh)
+    rng = np.random.default_rng(0)
+    imgs = rng.standard_normal(
+        (args.requests, args.image, args.image, 3)).astype(np.float32)
+    precision = None if args.precision in ("float", "fp32") else args.precision
+    # Warm run populates the prepack + compile caches; the timed run then
+    # measures the serving path, not deployment cost.
+    for rid in range(args.requests):
+        eng.submit(VisionRequest(rid=rid, image=imgs[rid],
+                                 model=args.cnn_model, precision=precision))
+    eng.run()
+    for rid in range(args.requests):
+        eng.submit(VisionRequest(rid=rid, image=imgs[rid],
+                                 model=args.cnn_model, precision=precision))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    for c in sorted(done, key=lambda c: c.rid)[:8]:
+        print(f"req {c.rid}: top1={c.top1} (bucket {c.batch})")
+    print(f"{len(done)} images in {dt:.2f}s ({len(done) / dt:.1f} img/s, "
+          f"model={args.cnn_model}@{args.image}px, "
+          f"precision={args.precision}, backend={args.backend})")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--workload", choices=("lm", "cnn"), default="lm")
+    ap.add_argument("--arch", choices=ARCH_IDS,
+                    help="LM architecture (required for --workload lm)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -44,19 +88,34 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--model-par", type=int, default=1,
                     help="devices per model replica (the mesh's 'model' "
-                    "axis); the rest shard decode slots on 'data'")
+                    "axis); the rest shard decode slots / image batches "
+                    "on 'data'")
+    # --workload cnn
+    ap.add_argument("--cnn-model", choices=CNN_MODELS, default="resnet50")
+    ap.add_argument("--image", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=1000)
+    ap.add_argument("--precision", default="<8:8>",
+                    help="'<W:I>' bit-widths, or 'float' for the fp path")
+    ap.add_argument("--backend", default="int-direct",
+                    choices=("int-direct", "popcount", "mxu-plane", "pallas"))
     args = ap.parse_args()
+
+    mesh = None
+    if len(jax.devices()) > 1 or args.model_par > 1:
+        mesh = make_serve_mesh(args.model_par)
+        print(f"serving on mesh {dict(mesh.shape)} "
+              f"({len(mesh.devices.ravel())} devices)")
+    if args.workload == "cnn":
+        serve_cnn(args, mesh)
+        return
+    if args.arch is None:
+        raise SystemExit("--workload lm requires --arch")
 
     arch = get_config(args.arch)
     cfg = arch.model.reduced() if args.reduced else arch.model
     if not cfg.embed_inputs or cfg.cross_attn_every:
         raise SystemExit("serve launcher drives token-in archs; "
                          "musicgen/vlm need frontend-stub drivers (see examples)")
-    mesh = None
-    if len(jax.devices()) > 1 or args.model_par > 1:
-        mesh = make_serve_mesh(args.model_par)
-        print(f"serving on mesh {dict(mesh.shape)} "
-              f"({len(mesh.devices.ravel())} devices)")
     params = cast_params(model_init(cfg, jax.random.PRNGKey(0)),
                          jnp.dtype(cfg.dtype))
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,

@@ -57,6 +57,52 @@ class Calibration:
         return Calibration(lat=dict(ones), energy=dict(ones))
 
 
+def crosscheck_measured(rows: list) -> list:
+    """Cross-check measured vision-engine throughput against the simulator.
+
+    ``rows`` are measured serving cells (``benchmarks/cnn_bench.py``
+    throughput rows: model / image / precision ``<W:I>`` / img_s). For each
+    quantized cell of a simulator-known model, price the same (model,
+    image, ⟨W:I⟩) on the calibrated NAND-SPIN architecture and report the
+    measured-to-simulated fps ratio.
+
+    The two numbers answer different questions — the engine measures the
+    TPU/CPU *reproduction* of the dataflow, the simulator prices the
+    paper's *hardware* — so the ratio is a tracked trajectory, not an
+    agreement check: a sudden shift flags either a serving-path perf
+    regression or a simulator/calibration change, which is exactly what a
+    fixed-point calibration must notice.
+    """
+    import re
+
+    from .simulator import simulate_model
+
+    out = []
+    for r in rows:
+        m = re.match(r"^<(\d+):(\d+)>$", str(r.get("precision", "")))
+        if not m:
+            continue                      # float reference cells: nothing to price
+        wb, ab = int(m.group(1)), int(m.group(2))
+        try:
+            sim = simulate_model(r["model"], image=int(r.get("image", 224)),
+                                 ab=ab, wb=wb)
+            fps = round(sim.fps, 2)
+        except KeyError:
+            # Model outside the simulator registry (models/cnn/specs.py):
+            # keep the row with a null prediction so the gap is visible in
+            # the artifact instead of silently dropping the cell.
+            fps = None
+        measured = float(r.get("img_s", 0.0))
+        out.append({
+            "model": r["model"], "image": r.get("image", 224),
+            "W:I": f"<{wb}:{ab}>", "batch": r.get("batch", 1),
+            "measured_img_s": round(measured, 2),
+            "sim_fps": fps,
+            "measured/sim": round(measured / fps, 4) if fps else None,
+        })
+    return out
+
+
 @functools.lru_cache(maxsize=1)
 def calibrated() -> Calibration:
     """Fit the per-phase factors at the ResNet50 ⟨8:8⟩ / 64 MB endpoint."""

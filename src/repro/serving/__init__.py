@@ -1,4 +1,8 @@
 from .engine import Completion, Request, ServeEngine
 from .sampler import SamplerConfig, sample
+from .vision import VisionCompletion, VisionEngine, VisionRequest, parse_precision
 
-__all__ = ["Completion", "Request", "SamplerConfig", "ServeEngine", "sample"]
+__all__ = [
+    "Completion", "Request", "SamplerConfig", "ServeEngine", "sample",
+    "VisionCompletion", "VisionEngine", "VisionRequest", "parse_precision",
+]

@@ -1,0 +1,301 @@
+"""Batched CNN serving engine: micro-batched vision inference on the fused
+conv path (DESIGN.md §6).
+
+The LM :class:`~repro.serving.engine.ServeEngine` gives the paper's LM
+deployment its production properties — prepack-once weights, donated jitted
+hot programs, the ("data", "model") serving mesh. The paper itself is a
+*CNN* accelerator, and this engine gives the conv stack the same treatment:
+
+  * **Queue + power-of-two micro-batching.** Requests carry (image, model,
+    precision ``<W:I>``). The engine groups the queue head's (model,
+    precision, image-shape) cohort and dispatches the largest power-of-two
+    bucket that fits (5 queued -> 4 + 1), so a varied load compiles at most
+    ``log2(max_batch) + 1`` forward variants per (model, cfg) — the same
+    bounded-compile-count argument as the LM engine's pow2 prompt chunks.
+  * **Prepack exactly once per (model, cfg).** The first request of a
+    (model, precision) pair quantizes + packs every conv/fc weight into
+    :class:`PackedConvWeight`/:class:`PackedWeight` (the paper's
+    program-subarrays-once step) and caches the tree; every later bucket of
+    that pair reuses it — no per-call weight calibration, quantization or
+    bit-plane packing. Conv layers then run the prepacked fast path:
+    materialized im2col for 1x1/small maps, the fused implicit-im2col
+    Pallas kernel where :func:`repro.core.fuse_conv_heuristic` fires
+    (``backend="pallas"``).
+  * **Donated jitted forward.** Each bucket's forward is one jitted program
+    with the image batch donated, so XLA reuses the input buffer for
+    activations instead of holding both alive.
+  * **Mesh-sharded serving.** With a ("data", "model") mesh
+    (``repro.launch.mesh.make_serve_mesh``) the paper's chip→bank mapping
+    applies to vision exactly as to LM decode: the micro-batch (chips)
+    shards on "data", and every conv's output channels O / every FC's
+    output columns (banks) on "model" — including both packed
+    representations (``PackedConvWeight.mat`` planes/codes/col_sums on
+    their N dim and the ``fused_planes`` on O; see
+    ``distributed/sharding.py::serve_cnn_param_shardings`` and
+    ``core/packed.py::shard_packed``). Forwards compile with explicit
+    in/out shardings, and the no-large-all-gather HLO invariant is asserted
+    in tests/test_vision_engine.py, mirroring tests/test_serve_sharded.py.
+    ``backend="pallas"`` is rejected with a mesh for the same reason as the
+    LM engine: ``pallas_call`` has no GSPMD rule.
+
+Numerics: a bucket's logits are bit-identical to jitted ``model.apply`` on
+the same stacked batch with the same ``PIMQuantConfig`` under the same
+device topology — prepacking produces the exact codes per-call
+quantization would, activation calibration is per-batch in both cases, and
+the serving machinery (bucketing, caching, donation) adds zero numerics.
+Across topologies the quantized integer core is partition-exact and the
+float path replicates (bitwise); only the quantized paths' float
+dequantization epilogue picks up ULP-level topology-dependent FMA
+differences (DESIGN.md §6). Asserted in tests/test_vision_engine.py for
+the float, int-direct and popcount paths, single-device and on a forced
+8-device mesh.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import re
+import warnings
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PIMQuantConfig
+from repro.models.cnn import alexnet, resnet, vgg
+from repro.models.cnn.layers import prepack_params as _prepack_cnn
+
+# The paper CNN zoo, keyed by serving name — the single registry the
+# engine, launcher (--cnn-model) and cnn benchmark all resolve against.
+MODEL_ZOO = {"alexnet": alexnet, "resnet50": resnet, "vgg19": vgg}
+
+_PRECISION = re.compile(r"^<(\d+):(\d+)>$")
+
+
+def parse_precision(precision: str | None) -> tuple[int, int] | None:
+    """``"<W:I>"`` -> (w_bits, a_bits); None/"float" -> None (fp path)."""
+    if precision is None or precision in ("float", "fp32"):
+        return None
+    m = _PRECISION.match(precision)
+    if not m:
+        raise ValueError(
+            f"precision {precision!r}: want '<W:I>' (e.g. '<8:8>') or None")
+    return int(m.group(1)), int(m.group(2))
+
+
+@dataclasses.dataclass(eq=False)   # identity equality: ndarray fields make
+class VisionRequest:               # field-wise __eq__ ambiguous, and the
+    rid: int                       # queue removes by identity anyway
+    image: np.ndarray               # (H, W, C) float
+    model: str = "resnet50"
+    precision: str | None = "<8:8>"  # "<W:I>" | None (float forward)
+
+
+@dataclasses.dataclass
+class VisionCompletion:
+    rid: int
+    logits: np.ndarray              # (num_classes,)
+    top1: int
+    batch: int                      # bucket size this request rode in
+
+
+class VisionEngine:
+    """Continuous micro-batched CNN inference over a model registry.
+
+    ``models`` maps a model name to its float param tree (names resolve
+    against the paper zoo: alexnet / resnet50 / vgg19) or to an explicit
+    ``(module, params)`` pair for custom CNNs — any module exposing
+    ``apply(params, x, cfg=...)`` over ``repro.core.pim_conv2d`` works.
+
+    ``backend`` picks the Eq. 1 execution strategy for every quantized
+    request ("int-direct" | "popcount" | "mxu-plane" | "pallas"); requests
+    pick their own precision. ``max_batch`` is the largest micro-batch
+    bucket (rounded down to a power of two).
+    """
+
+    def __init__(self, models: dict, backend: str = "int-direct",
+                 max_batch: int = 8, mesh=None):
+        if mesh is not None and backend == "pallas":
+            # Same rule as ServeEngine: pallas_call has no GSPMD partitioning
+            # rule, so the "model"-split planes would silently all-gather on
+            # every bucket. Use "popcount" or "int-direct" on a mesh.
+            raise ValueError(
+                "mesh-sharded vision serving does not support backend "
+                "'pallas'; use 'popcount' or 'int-direct'")
+        self._models = {}
+        for name, entry in models.items():
+            if isinstance(entry, tuple):
+                module, params = entry
+            else:
+                if name not in MODEL_ZOO:
+                    raise ValueError(
+                        f"unknown model {name!r} (zoo: {sorted(MODEL_ZOO)}); "
+                        "pass (module, params) for custom CNNs")
+                module, params = MODEL_ZOO[name], entry
+            self._models[name] = (module, params)
+        self.backend = backend
+        self.max_batch = 1 << (max(1, max_batch).bit_length() - 1)
+        self.mesh = mesh
+        self.queue: collections.deque = collections.deque()
+        self._packed: dict = {}     # (model, precision) -> param tree
+        self._param_sh: dict = {}   # (model, precision) -> sharding tree
+        self._fwd: dict = {}        # (model, precision, bucket) -> jitted fn
+
+    # -- mesh scoping (same contract as ServeEngine._activate) --------------
+
+    @contextlib.contextmanager
+    def _activate(self, quantized: bool = True):
+        """Scope the mesh (and the CNN serving layout flag consumed by
+        ``constrain_cnn_conv_input``/``_output``) to the engine's own
+        program calls, like ``ServeEngine._activate``.
+
+        Float buckets never activate it: their jit is fully replicated, and
+        tracing them under the global mesh would let ``_constrain_weight``
+        split the FC contractions — a float partial-sum reorder that breaks
+        the bit-identity contract."""
+        if self.mesh is None or not quantized:
+            yield
+            return
+        from repro.distributed import sharding as _sh
+
+        prev_mesh, prev_cnn = _sh.get_mesh(), _sh.get_cnn_serve_layout()
+        _sh.set_mesh(self.mesh)
+        _sh.set_cnn_serve_layout(True)
+        try:
+            yield
+        finally:
+            _sh.set_mesh(prev_mesh)
+            _sh.set_cnn_serve_layout(prev_cnn)
+
+    # -- caches --------------------------------------------------------------
+
+    def _cfg(self, precision: str | None) -> PIMQuantConfig | None:
+        bits = parse_precision(precision)
+        if bits is None:
+            return None
+        return PIMQuantConfig(w_bits=bits[0], a_bits=bits[1],
+                              backend=self.backend)
+
+    def _packed_params(self, model: str, precision: str | None):
+        """Quantize+pack (and mesh-commit) exactly once per (model, cfg)."""
+        mkey = (model, precision)
+        tree = self._packed.get(mkey)
+        if tree is None:
+            module, params = self._models[model]
+            cfg = self._cfg(precision)
+            tree = _prepack_cnn(params, cfg) if cfg is not None else params
+            if self.mesh is not None:
+                from repro.distributed import sharding as _sh
+
+                p_sh = _sh.serve_cnn_param_shardings(
+                    tree, self.mesh, quantized=cfg is not None)
+                tree = jax.device_put(tree, p_sh)
+                self._param_sh[mkey] = p_sh
+            self._packed[mkey] = tree
+        return tree
+
+    def _fwd_fn(self, model: str, precision: str | None, bucket: int):
+        key = (model, precision, bucket)
+        fn = self._fwd.get(key)
+        if fn is None:
+            module, _ = self._models[model]
+            cfg = self._cfg(precision)
+            kw = {}
+            if self.mesh is not None:
+                from repro.distributed import sharding as _sh
+
+                self._packed_params(model, precision)  # ensure sharding tree
+                if cfg is None:
+                    # Float reference path: fully replicated. CPU float convs
+                    # are not bit-stable across batch shapes, so sharding the
+                    # batch would break the bit-identity contract; the
+                    # quantized deployment (exact integer core) is what
+                    # shards chips x banks.
+                    batch_sh = logits_sh = _sh.replicated(self.mesh)
+                else:
+                    batch_sh = _sh.serve_cnn_batch_sharding(self.mesh, bucket)
+                    logits_sh = _sh.serve_cnn_logits_sharding(self.mesh,
+                                                              bucket)
+                kw = dict(
+                    in_shardings=(self._param_sh[(model, precision)],
+                                  batch_sh),
+                    out_shardings=logits_sh)
+            fn = jax.jit(partial(self._fwd_impl, module.apply, cfg),
+                         donate_argnums=(1,), **kw)
+            self._fwd[key] = fn
+        return fn
+
+    @staticmethod
+    def _fwd_impl(apply_fn, cfg, params, batch):
+        return apply_fn(params, batch, cfg=cfg)
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, req: VisionRequest):
+        if req.model not in self._models:
+            raise ValueError(f"unknown model {req.model!r} "
+                             f"(registered: {sorted(self._models)})")
+        # Validate at admission, not dispatch, and canonicalize the float
+        # spellings so "float"/"fp32"/None requests share one cohort.
+        if parse_precision(req.precision) is None:
+            req.precision = None
+        self.queue.append(req)
+
+    def _group_key(self, req: VisionRequest):
+        return (req.model, req.precision, np.asarray(req.image).shape)
+
+    def step(self) -> list:
+        """Dispatch one micro-batch bucket; returns its completions.
+
+        The queue head picks the (model, precision, shape) cohort; the
+        bucket is the largest power of two ≤ min(cohort, max_batch).
+        """
+        if not self.queue:
+            return []
+        key = self._group_key(self.queue[0])
+        # Two O(Q) passes, no per-request deque.remove: size the cohort,
+        # then split taken / kept preserving the queue order of the rest.
+        m = 0
+        for r in self.queue:
+            if self._group_key(r) == key:
+                m += 1
+                if m == self.max_batch:
+                    break
+        bucket = 1 << (m.bit_length() - 1)
+        group, kept = [], []
+        for r in self.queue:
+            if len(group) < bucket and self._group_key(r) == key:
+                group.append(r)
+            else:
+                kept.append(r)
+        self.queue = collections.deque(kept)
+        model, precision, _ = key
+        batch = jnp.asarray(
+            np.stack([np.asarray(r.image, np.float32) for r in group]))
+        params = self._packed_params(model, precision)
+        quantized = parse_precision(precision) is not None
+        with self._activate(quantized), warnings.catch_warnings():
+            # The donated image batch cannot alias the (much smaller) logits
+            # output on every backend; the donation is still declared so
+            # backends that can reuse the buffer do. Silence the known-benign
+            # "not usable" notice instead of spamming every bucket.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            logits = self._fwd_fn(model, precision, bucket)(params, batch)
+        logits = np.asarray(logits)
+        return [
+            VisionCompletion(rid=r.rid, logits=logits[i],
+                             top1=int(logits[i].argmax()), batch=bucket)
+            for i, r in enumerate(group)
+        ]
+
+    def run(self, max_steps: int = 10_000) -> list:
+        """Drain the queue; returns all completions."""
+        out = []
+        for _ in range(max_steps):
+            if not self.queue:
+                break
+            out.extend(self.step())
+        return out

@@ -64,13 +64,15 @@ def test_quantize_roundtrip_bound(bits, lo, span):
 
 
 def test_prequantized_weights_path():
-    from repro.core import PIMQuantConfig, prepack_weights
+    """Legacy ``wq=``/``qw=`` kwargs of quantized_matmul still work (the
+    prepack_weights helper that produced them is gone — PackedWeight via
+    prepack_linear is the deployment path now)."""
     from repro.core.bitserial import quantized_matmul as qm
 
     a = jax.random.normal(jax.random.PRNGKey(4), (4, 64))
     w = jax.random.normal(jax.random.PRNGKey(5), (64, 12))
-    cfg = PIMQuantConfig(w_bits=8, a_bits=8, backend="popcount")
-    codes, wq = prepack_weights(w, cfg)
+    wq = calibrate_minmax(w, 8)
+    codes = quantize(w, wq)
     y1 = qm(a, w, 8, 8, backend="popcount")
     y2 = qm(a, w, 8, 8, backend="popcount", wq=wq, qw=codes)
     assert jnp.allclose(y1, y2)

@@ -158,6 +158,93 @@ def test_fused_conv_never_materializes_patch_matrix():
                for a in _jaxpr_avals(mat.jaxpr))
 
 
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("stride,padding", [(2, 1), (2, 2), (1, 2)])
+def test_fused_conv_stride2_nonsquare_odd_width(bits, stride, padding):
+    """Fused == materialized bit-exactly on non-square, odd-width inputs
+    with stride 2 and padding > 0 (the fastpath suite above only walked
+    stride-1 geometries), across the paper's <2:2>/<4:4>/<8:8> sweep."""
+    x = jax.random.normal(jax.random.PRNGKey(20), (2, 9, 13, 5))
+    w = jax.random.normal(jax.random.PRNGKey(21), (3, 3, 5, 8)) * 0.2
+    cfg_f = PIMQuantConfig(w_bits=bits, a_bits=bits, backend="pallas")
+    pk = prepack_conv2d(w, cfg_f)
+    y_fused = pim_conv2d(x, pk, stride=stride, padding=padding, cfg=cfg_f,
+                         conv_mode="fused")
+    cfg_i = PIMQuantConfig(w_bits=bits, a_bits=bits, backend="int-direct")
+    y_mat = pim_conv2d(x, pk, stride=stride, padding=padding, cfg=cfg_i,
+                       conv_mode="im2col")
+    assert y_fused.shape == y_mat.shape
+    assert jnp.array_equal(y_fused, y_mat)
+
+
+def test_fused_conv_odd_o_pads_not_degenerates():
+    """Regression: prime O used to shrink the output block to bo=1 (an
+    O-sized grid of tiny kernels). Now O pads up to the requested block and
+    the result is sliced — same bits, bounded grid."""
+    from repro.kernels.conv2d_fused import _pad_o_blocks
+
+    # prime O with the default block: one padded 128-block step, not 131.
+    assert _pad_o_blocks(131, 128) == (128, 125)
+    assert _pad_o_blocks(67, 32) == (32, 29)     # grid 3, not 67
+    assert _pad_o_blocks(65, 128) == (65, 0)     # O < block: single tile
+    assert _pad_o_blocks(128, 128) == (128, 0)   # exact fit: no padding
+    for o, bo in [(131, 128), (67, 32), (193, 128)]:
+        b, pad = _pad_o_blocks(o, bo)
+        assert (o + pad) % b == 0
+        assert (o + pad) // b <= -(-o // b)      # never more tiles than ceil
+
+    x = jax.random.normal(jax.random.PRNGKey(22), (1, 6, 6, 8))
+    w = jax.random.normal(jax.random.PRNGKey(23), (3, 3, 8, 131)) * 0.2
+    cfg_f = PIMQuantConfig(w_bits=4, a_bits=4, backend="pallas")
+    pk = prepack_conv2d(w, cfg_f)
+    y_fused = pim_conv2d(x, pk, stride=1, padding=1, cfg=cfg_f,
+                         conv_mode="fused")
+    cfg_i = PIMQuantConfig(w_bits=4, a_bits=4, backend="int-direct")
+    y_mat = pim_conv2d(x, pk, stride=1, padding=1, cfg=cfg_i,
+                       conv_mode="im2col")
+    assert y_fused.shape == (1, 6, 6, 131)
+    assert jnp.array_equal(y_fused, y_mat)
+
+
+def test_conv_activation_calibration_ignores_padding():
+    """Regression: activation quantization used to calibrate on the padded
+    tensor, so a strictly-positive input range (post-ReLU features) was
+    stretched down to the padding zeros — wasted code space, inflated
+    error. Calibrating on the real input must beat the old behavior."""
+    key = jax.random.PRNGKey(24)
+    # post-ReLU-like features in [2, 5]: zero is far outside the range
+    x = jax.random.uniform(key, (2, 8, 8, 16), minval=2.0, maxval=5.0)
+    w = jax.random.normal(jax.random.PRNGKey(25), (3, 3, 16, 8)) * 0.1
+    cfg = PIMQuantConfig(w_bits=4, a_bits=4, backend="int-direct")
+    ref = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y_new = pim_conv2d(x, w, stride=1, padding=1, cfg=cfg)
+    # Old behavior, reconstructed: pre-pad the input so calibration sees the
+    # zeros (exactly what calibrate_minmax(xp) did before the fix).
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    y_old = pim_conv2d(xp, w, stride=1, padding=0, cfg=cfg)
+    assert y_new.shape == y_old.shape == ref.shape
+    err_new = float(jnp.abs(y_new - ref).max())
+    err_old = float(jnp.abs(y_old - ref).max())
+    assert err_new < err_old, (err_new, err_old)
+
+
+def test_unquantized_conv_bias_preserves_dtype():
+    """Regression: the cfg=None fallback added a float32 bias without a
+    cast, silently upcasting a bf16 model's activations on that path only."""
+    x = jax.random.normal(jax.random.PRNGKey(26), (2, 8, 8, 4)).astype(
+        jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(27), (3, 3, 4, 8))
+    b = jnp.ones((8,), jnp.float32)
+    y = pim_conv2d(x, w, b, stride=1, padding=1, cfg=None)
+    assert y.dtype == jnp.bfloat16
+    # packed weights take the same fallback when cfg is disabled
+    pk = prepack_conv2d(w, PIMQuantConfig(w_bits=8, a_bits=8))
+    y2 = pim_conv2d(x, pk, b, stride=1, padding=1, cfg=None)
+    assert y2.dtype == jnp.bfloat16
+
+
 def test_fuse_heuristic_dispatch():
     """auto mode: big maps fuse on the pallas backend, 1x1 and XLA don't."""
     assert fuse_conv_heuristic(64, 112, 112, 3, 3, 64, "pallas")
