@@ -1,0 +1,128 @@
+"""Accuracy-vs-BER frontier for the NAND-SPIN fault model (DESIGN.md §7).
+
+The paper's architecture stores every quantized weight bit as one MTJ
+state; STT-MRAM's stochastic write/retention physics makes raw bit error
+rates a first-order design input. This benchmark sweeps the programming
+BER over the paper's AlexNet workload and measures what the mitigation
+hierarchy (MSB-plane majority voting + column-checksum detection +
+spare-column remap, ``repro.pim.faults``) buys back:
+
+  * ``acc_free``      — clean quantized top-1 agreement with the float
+                        reference (the quantization ceiling at that ⟨W:I⟩).
+  * ``acc_faulty``    — same model programmed through the bare fault
+                        channel, no mitigation.
+  * ``acc_protected`` — programmed through the same faults (same PRNG key:
+                        identical error pattern) with the hierarchy armed.
+  * ``gap_recovered`` — (protected − faulty) / (free − faulty), the
+                        fraction of the fault-induced accuracy gap the
+                        mitigation recovers (1.0 when there is no gap).
+
+``fault_overhead`` prices what that protection costs: the storage /
+sense / programming redundancy factors charged by ``pim.cost_model`` and
+the extra die area from ``pim.area.ecc_area_mm2`` — the frontier's other
+axis. ``benchmarks.run --only fault`` renders both tables and writes
+``BENCH_faults.json``; ``--smoke`` shrinks the sweep to CI scale with the
+same artifact shape.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+from repro.core import PIMQuantConfig
+from repro.models.cnn import alexnet
+from repro.models.cnn.layers import prepack_params
+from repro.pim import FaultConfig, ecc_area_mm2, redundancy_factors
+from repro.pim.hierarchy import Geometry
+
+_IMAGE, _CLASSES, _SEED = 64, 16, 11
+_PRECISIONS = ["<4:4>", "<8:8>"]
+
+
+def _protected(w_bits: int, ber: float) -> FaultConfig:
+    """The benchmark's mitigation point, tuned per precision.
+
+    4-bit codes shrug off unvoted-LSB flips (max perturbation 3 of 15
+    levels), so voting the top half of the planes suffices. 8-bit codes do
+    not: flips in unvoted planes that cancel inside a column sum evade the
+    checksum forever (the documented quadratic escape), and at 255 levels
+    the surviving corruption costs real accuracy — the 8-bit point votes
+    every plane. Both arm the checksum with 112 spare columns per
+    128-column subarray (test-and-repair regime: at these BERs nearly every
+    column is flagged, so the spare fraction bounds the repaired share)."""
+    protect = w_bits if w_bits > 4 else math.ceil(w_bits / 2)
+    return FaultConfig(write_ber=ber, seed=_SEED,
+                       protect_msb=protect, vote_copies=3,
+                       checksum=True, spare_cols=112)
+
+
+def _top1(tree, cfg, batch):
+    fn = jax.jit(lambda p, x: alexnet.apply(p, x, cfg=cfg))
+    return np.asarray(fn(tree, batch)).argmax(-1)
+
+
+def fault_frontier(smoke: bool = False):
+    """Top-1-vs-float accuracy across (precision, BER) with/without ECC."""
+    bers = [1e-3, 1e-2] if smoke else [1e-3, 3e-3, 1e-2, 3e-2]
+    n_images = 16 if smoke else 32
+    key = jax.random.PRNGKey(0)
+    params = alexnet.init(key, num_classes=_CLASSES, image=_IMAGE)
+    batch = np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 1),
+                          (n_images, _IMAGE, _IMAGE, 3)), np.float32)
+    ref = _top1(params, None, batch)
+
+    rows = []
+    for precision in _PRECISIONS:
+        w_bits, a_bits = (int(b) for b in precision.strip("<>").split(":"))
+        cfg = PIMQuantConfig(w_bits=w_bits, a_bits=a_bits,
+                             backend="int-direct")
+        clean = prepack_params(params, cfg)
+        acc_free = float((_top1(clean, cfg, batch) == ref).mean())
+        for ber in bers:
+            bare = FaultConfig(write_ber=ber, seed=_SEED)
+            faulty = prepack_params(params, cfg, faults=bare)
+            prot = prepack_params(params, cfg,
+                                  faults=_protected(w_bits, ber))
+            acc_faulty = float((_top1(faulty, cfg, batch) == ref).mean())
+            acc_prot = float((_top1(prot, cfg, batch) == ref).mean())
+            gap = acc_free - acc_faulty
+            recovered = (1.0 if gap <= 1e-9 else
+                         max(0.0, min(1.0, (acc_prot - acc_faulty) / gap)))
+            rows.append({
+                "model": "alexnet", "precision": precision, "ber": ber,
+                "acc_free": round(acc_free, 4),
+                "acc_faulty": round(acc_faulty, 4),
+                "acc_protected": round(acc_prot, 4),
+                "gap_recovered": round(recovered, 4),
+            })
+    return rows
+
+
+def fault_overhead(smoke: bool = False):
+    """What the protection point costs: redundancy factors + die area."""
+    del smoke  # analytical: already CI-scale
+    g = Geometry()
+    base_area = None
+    rows = []
+    for precision in _PRECISIONS:
+        w_bits = int(precision.strip("<>").split(":")[0])
+        fc = _protected(w_bits, ber=0.0)
+        red = redundancy_factors(fc, w_bits, g.cols)
+        if base_area is None:
+            from repro.pim import chip_area_mm2
+            base_area = chip_area_mm2(g)
+        extra = ecc_area_mm2(g, fc, w_bits)
+        rows.append({
+            "precision": precision,
+            "protect_msb": fc.protect_msb, "vote_copies": fc.vote_copies,
+            "spare_cols": fc.spare_cols,
+            "storage_x": round(red["storage"], 3),
+            "rowops_x": round(red["rowops"], 3),
+            "program_x": round(red["program"], 3),
+            "ecc_area_mm2": round(extra, 3),
+            "area_overhead_pct": round(100.0 * extra / base_area, 2),
+        })
+    return rows

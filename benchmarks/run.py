@@ -2,11 +2,13 @@
 
 Sections map 1:1 onto the paper's tables/figures (+ the TPU-side roofline
 artifacts). Each renders as an aligned text table. Kernel sections are
-additionally written to ``BENCH_kernels.json`` and the serving section to
-``BENCH_serving.json`` at the repo root so future PRs can track the perf
-trajectory (cached-weight vs per-call serving, fused-conv vs im2col,
-backend sweep, engine hot-loop tokens/sec + TTFT). ``--smoke`` shrinks the
-serving benchmark to CI scale without changing the artifact shape.
+additionally written to ``BENCH_kernels.json``, the serving section to
+``BENCH_serving.json``, the vision section to ``BENCH_cnn.json`` and the
+fault sections to ``BENCH_faults.json`` at the repo root so future PRs can
+track the perf trajectory (cached-weight vs per-call serving, fused-conv
+vs im2col, backend sweep, engine hot-loop tokens/sec + TTFT,
+accuracy-vs-BER mitigation frontier). ``--smoke`` shrinks the serving and
+fault benchmarks to CI scale without changing the artifact shape.
 """
 from __future__ import annotations
 
@@ -39,7 +41,8 @@ def main(argv=None):
                     help="CI-scale serving benchmark (same artifact shape)")
     args = ap.parse_args(argv)
 
-    from . import cnn_bench, kernel_bench, lm_roofline, paper_figures, serve_bench
+    from . import (cnn_bench, fault_bench, kernel_bench, lm_roofline,
+                   paper_figures, serve_bench)
 
     serve_throughput = functools.partial(serve_bench.serve_throughput,
                                          smoke=args.smoke)
@@ -48,6 +51,8 @@ def main(argv=None):
     cnn_throughput = functools.partial(cnn_bench.cnn_throughput,
                                        smoke=args.smoke)
     cnn_crosscheck = functools.partial(cnn_bench.cnn_sim_crosscheck,
+                                       smoke=args.smoke)
+    fault_frontier = functools.partial(fault_bench.fault_frontier,
                                        smoke=args.smoke)
     sections = [
         ("fig13a: capacity sweep", paper_figures.fig13a_capacity_sweep),
@@ -74,6 +79,9 @@ def main(argv=None):
          cnn_throughput),
         ("cnn: measured vs simulated fps (pim.calibrate cross-check)",
          cnn_crosscheck),
+        ("faults: accuracy-vs-BER frontier (ECC on/off)", fault_frontier),
+        ("faults: mitigation overhead (redundancy x, die area)",
+         fault_bench.fault_overhead),
     ]
     # Kernel sections feeding BENCH_kernels.json (rows reused, not re-run).
     json_keys = {
@@ -85,6 +93,7 @@ def main(argv=None):
     payload = {}
     serve_payload = {}
     cnn_payload = {}
+    fault_payload = {}
     t0 = time.time()
     failures = []
     for title, fn in sections:
@@ -103,17 +112,24 @@ def main(argv=None):
                 cnn_payload["throughput"] = rows
             elif fn is cnn_crosscheck:
                 cnn_payload["sim_crosscheck"] = rows
+            elif fn is fault_frontier:
+                fault_payload["frontier"] = rows
+            elif fn is fault_bench.fault_overhead:
+                fault_payload["overhead"] = rows
             if serve_payload:
                 serve_payload["smoke"] = args.smoke
             if cnn_payload:
                 cnn_payload["smoke"] = args.smoke
+            if fault_payload:
+                fault_payload["smoke"] = args.smoke
         except Exception as e:  # keep the suite running; report at the end
             failures.append((title, repr(e)))
             print(f"\n== {title} FAILED: {e!r}")
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for data, name in ((payload, "BENCH_kernels.json"),
                        (serve_payload, "BENCH_serving.json"),
-                       (cnn_payload, "BENCH_cnn.json")):
+                       (cnn_payload, "BENCH_cnn.json"),
+                       (fault_payload, "BENCH_faults.json")):
         if not data:
             continue
         path = os.path.join(repo_root, name)

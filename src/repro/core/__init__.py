@@ -10,7 +10,8 @@ Public surface:
 from .bitserial import int_matmul, int_matmul_prepacked, quantized_matmul
 from .bitslice import bitplanes, pack_bits, plane_weights, popcount, slice_and_pack, unpack_bits
 from .mapping import SubarrayPlan, TilePlan, plan_matmul, plan_subarrays
-from .packed import PackedConvWeight, PackedWeight, prepack, prepack_conv
+from .packed import (PackedConvWeight, PackedWeight, prepack, prepack_conv,
+                     repack_codes, repack_conv_codes)
 from .pim_layers import (
     PIMQuantConfig,
     fuse_conv_heuristic,
@@ -36,6 +37,7 @@ __all__ = [
     "unpack_bits",
     "int_matmul", "int_matmul_prepacked", "quantized_matmul",
     "PackedConvWeight", "PackedWeight", "prepack", "prepack_conv",
+    "repack_codes", "repack_conv_codes",
     "PIMQuantConfig", "fuse_conv_heuristic", "pim_conv2d", "pim_linear",
     "prepack_conv2d", "prepack_linear",
     "SubarrayPlan", "TilePlan", "plan_matmul", "plan_subarrays",

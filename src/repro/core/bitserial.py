@@ -140,7 +140,16 @@ def int_matmul_prepacked(qa: jax.Array, w: PackedWeight, a_bits: int,
     The popcount/pallas backends consume the prepacked planes directly —
     the weight side of quantize->slice->pack never re-runs (the in-array
     operand-reuse property the paper's subarray programming buys).
+
+    Under an active :func:`repro.pim.faults.read_disturb_scope` every call
+    sees a freshly disturbed view of the stored planes (STT-MRAM read
+    disturb); the import is lazy and the check is a trace-time no-op when
+    the scope is inactive, so fault-free programs lower to identical HLO.
     """
+    from repro.pim import faults as _faults  # lazy: pim imports core
+
+    if _faults.read_disturb_active():
+        w = _faults.disturb_packed(w)
     if backend == "int-direct":
         return int_matmul_direct(qa, w.codes)
     if backend == "mxu-plane":

@@ -170,6 +170,31 @@ def shard_packed(pw: PackedWeight | PackedConvWeight, mesh,
     )
 
 
+def repack_codes(pw: PackedWeight, codes: jax.Array) -> PackedWeight:
+    """Re-program a packed weight's subarrays with new integer codes.
+
+    Planes are re-derived from ``codes``; the digital periphery state
+    (``col_sums``, ``wq``) is kept as-is. This is the primitive behind
+    fault injection and spare-column repair (repro.pim.faults): the array
+    image changes, the periphery's golden Sw register does not.
+    """
+    return PackedWeight(codes=codes,
+                        planes=bitslice.slice_and_pack(codes.T, pw.bits),
+                        col_sums=pw.col_sums, wq=pw.wq)
+
+
+def repack_conv_codes(pcw: PackedConvWeight, flat_codes: jax.Array
+                      ) -> PackedConvWeight:
+    """Conv analog of :func:`repack_codes`: new (KH*KW*C, O) im2col codes,
+    both lowering layouts rebuilt so they describe the same device state."""
+    kh, kw, c, o = pcw.kernel_shape
+    wt = flat_codes.reshape(kh, kw, c, o).transpose(0, 3, 1, 2)
+    fused = bitslice.slice_and_pack(wt, pcw.bits).transpose(1, 0, 2, 3, 4)
+    return PackedConvWeight(mat=repack_codes(pcw.mat, flat_codes),
+                            fused_planes=fused,
+                            kernel_shape=pcw.kernel_shape)
+
+
 def prepack_conv(w: jax.Array, w_bits: int) -> PackedConvWeight:
     """Prepack a (KH, KW, C, O) conv weight for both lowering paths."""
     kh, kw, c, o = w.shape

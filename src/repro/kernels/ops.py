@@ -100,7 +100,14 @@ def conv2d_bitserial(
     if interpret is None:
         interpret = _interpret_default()
     n, hp, wp, c = qx.shape
-    kh, _, _, kw_sz, cw = pw.shape
+    kh, _, o, kw_sz, cw = pw.shape
+    # STT-MRAM read disturb: under an active fault scope each launch senses
+    # a freshly disturbed view of the stored planes. Trace-time no-op (and
+    # HLO-identical) when the scope is inactive.
+    from repro.pim import faults as _faults
+
+    if _faults.read_disturb_active():
+        pw = _faults.disturb_fused_planes(pw, (kh, kw_sz, c, o))
     oh = (hp - kh) // stride + 1
     ow = (wp - kw_sz) // stride + 1
     # Channel pack through the Pallas pack kernel: block-tiled in VMEM, so

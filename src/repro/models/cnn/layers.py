@@ -20,7 +20,7 @@ from repro.core import (
 )
 
 
-def prepack_params(params, cfg: PIMQuantConfig):
+def prepack_params(params, cfg: PIMQuantConfig, faults=None):
     """Quantize + pack every conv/fc weight in a CNN param tree exactly once.
 
     The paper's deployment step: subarrays are programmed once, then every
@@ -28,6 +28,11 @@ def prepack_params(params, cfg: PIMQuantConfig):
     :class:`PackedWeight`/:class:`PackedConvWeight`; biases and folded-BN
     params pass through untouched. ``conv_block``/``fc_block`` consume the
     prepacked tree unchanged.
+
+    ``faults``: optional :class:`repro.pim.faults.FaultConfig` — corrupt the
+    freshly programmed planes with persistent device faults (and, with
+    ``faults.checksum``, repair flagged columns from spares) before the tree
+    ships, modeling a real NAND-SPIN programming pass.
     """
     if cfg is None or not cfg.enabled:
         return params
@@ -44,7 +49,12 @@ def prepack_params(params, cfg: PIMQuantConfig):
             return out
         return p
 
-    return walk(params)
+    packed = walk(params)
+    if faults is not None:
+        from repro.pim.faults import inject_tree
+
+        packed, _ = inject_tree(packed, faults)
+    return packed
 
 
 def init_conv(key, k, cin, cout, bn=True):

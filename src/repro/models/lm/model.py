@@ -196,7 +196,7 @@ _PIM_PROJ_KEYS = frozenset({
 })
 
 
-def prepack_params(params, cfg, mesh=None):
+def prepack_params(params, cfg, mesh=None, faults=None):
     """Quantize + pack every pim_linear projection weight exactly once.
 
     The serving-time analog of the paper's subarray programming: after this,
@@ -215,6 +215,14 @@ def prepack_params(params, cfg, mesh=None):
     "model" axis (the paper's banks; DESIGN.md §5). Applies whether or not
     ``cfg`` enables quantization, so the float serving path shards the same
     way.
+
+    ``faults``: an optional :class:`repro.pim.faults.FaultConfig` — after
+    packing, persistent device faults (stochastic writes, retention,
+    stuck-at cells, dead subarrays) corrupt the packed planes, exactly as a
+    real subarray-programming pass would; with ``faults.checksum`` armed,
+    flagged columns repair from spares before the tree ships. Applied
+    *before* ``maybe_shard`` so the corruption draws on global shapes —
+    bit-identical on one device or the full serving mesh.
     """
     from repro.core.packed import prepack
 
@@ -248,7 +256,12 @@ def prepack_params(params, cfg, mesh=None):
             return type(p)(walk(v) for v in p)
         return p
 
-    return maybe_shard(walk(params))
+    packed = walk(params)
+    if faults is not None:
+        from repro.pim.faults import inject_tree
+
+        packed, _ = inject_tree(packed, faults)
+    return maybe_shard(packed)
 
 
 # ---------------------------------------------------------------------------

@@ -47,3 +47,25 @@ def chip_area_mm2(g: Geometry) -> float:
 def add_on_area_mm2(g: Geometry) -> dict:
     total = chip_area_mm2(g) * ADD_ON_FRACTION / (1.0 + ADD_ON_FRACTION)
     return {k: v * total for k, v in ADD_ON_BREAKDOWN.items()}
+
+
+def ecc_area_mm2(g: Geometry, faults, w_bits: int = 8) -> float:
+    """Extra die area of the fault-mitigation hierarchy (DESIGN.md §7).
+
+    Redundant MSB-plane subarrays and spare columns scale the cell array by
+    the storage redundancy factor; the majority voter + checksum comparator
+    ride the add-on periphery, charged at the sense-amp/driver rate on the
+    extra planes (each redundant copy brings its own sense path to vote).
+    Zero when ``faults`` is None or carries no mitigation.
+    """
+    from .cost_model import redundancy_factors
+
+    f = redundancy_factors(faults, w_bits, g.cols)["storage"]
+    if f <= 1.0:
+        return 0.0
+    cell = CELL_AREA_F2 * FEATURE_M**2
+    array_mm2 = g.capacity_bits * cell * 1e6
+    extra_array = array_mm2 * (f - 1.0)
+    extra_periph = (extra_array / array_efficiency(g.capacity_mb)
+                    * ADD_ON_FRACTION * ADD_ON_BREAKDOWN["sense_amps_drivers"])
+    return extra_array + extra_periph

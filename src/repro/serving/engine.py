@@ -31,8 +31,22 @@ token boundary; once the queue drains it switches to multi-step dispatches.
 
 Fault tolerance: ``snapshot``/``restore`` round-trip the device state +
 control block through the checkpoint module and carry the per-slot host
-bookkeeping in the manifest, so a preempted server resumes mid-generation
-(queued-but-unadmitted requests are the caller's to resubmit).
+bookkeeping AND the queued-but-unadmitted requests in the manifest, so a
+preempted server resumes mid-generation with nothing resubmitted.
+
+Self-healing (DESIGN.md §7): ``faults`` injects the NAND-SPIN device-fault
+model — persistent write/stuck-at/retention faults corrupt the packed
+planes at prepack, transient read disturb strikes inside the jitted decode
+step (each step derives a disturb key from the engine key and activates
+``repro.pim.faults.read_disturb_scope`` around the bit-serial matmuls).
+``watchdog`` arms per-dispatch supervision: an in-memory shadow snapshot
+before each dispatch, rollback + bounded-backoff retry (the training
+stack's ``RestartPolicy``) on injected faults / device errors / non-finite
+logits / blown deadlines, durable disk snapshots on a cadence, and — when
+the failure budget is exhausted — graceful degradation to the float
+fallback path so the bank keeps serving instead of crashing. Both default
+to None, in which case every hot-loop program lowers to byte-identical HLO
+(asserted in tests/test_faults.py).
 
 PIM deployment: when ``cfg.pim`` is enabled the constructor prepacks every
 projection weight into :class:`repro.core.packed.PackedWeight` — the
@@ -55,6 +69,8 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import time
+import warnings
 from functools import partial
 
 import jax
@@ -98,9 +114,13 @@ def _pow2_chunks(n: int) -> list[int]:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_len: int = 512, sampler: SamplerConfig | None = None,
-                 seed: int = 0, drain_steps: int = 8, mesh=None):
+                 seed: int = 0, drain_steps: int = 8, mesh=None,
+                 faults=None, watchdog=None, fault_injector=None):
         self.cfg = cfg
         self.mesh = mesh
+        self.faults = faults
+        self.watchdog = watchdog
+        self.fault_injector = fault_injector   # test hook: raises per dispatch
         if mesh is not None and getattr(cfg.pim, "enabled", False) \
                 and getattr(cfg.pim, "backend", "") == "pallas":
             # pallas_call has no GSPMD partitioning rule: under plain jit the
@@ -114,8 +134,14 @@ class ServeEngine:
         # programs subarrays once): every prefill/decode after this reuses
         # the PackedWeight planes — no per-call re-calibration or re-pack.
         # With a mesh, the tree is committed to the serving layout here
-        # (banks = "model"-axis column split; DESIGN.md §5).
-        self.params = prepack_params(params, cfg.pim, mesh=mesh)
+        # (banks = "model"-axis column split; DESIGN.md §5). Persistent
+        # device faults strike this programming pass (and, with
+        # faults.checksum, repair from spares) before the tree ships.
+        self.params = prepack_params(params, cfg.pim, mesh=mesh,
+                                     faults=faults)
+        # The float masters survive only under supervision: they are the
+        # golden weights the degrade-to-float fallback re-deploys from.
+        self._raw_params = params if watchdog is not None else None
         self.max_batch = max_batch
         self.max_len = max_len
         self.sampler = sampler or SamplerConfig()
@@ -138,15 +164,37 @@ class ServeEngine:
         self.queue: collections.deque = collections.deque()
         self.done: list = []
 
-        # With a mesh, every hot-loop program compiles with explicit in/out
-        # shardings equal to the committed layouts: the donated state/ctrl
-        # buffers then alias in place AND keep one stable layout across
-        # calls, so steady-state decode inserts no resharding transfer
-        # (asserted on HLO in tests/test_serve_sharded.py).
+        # Supervision state (inert unless watchdog/fault_injector set).
+        from repro.training.fault_tolerance import (RestartPolicy,
+                                                    StragglerDetector,
+                                                    WatchdogConfig)
+
+        wd = watchdog or WatchdogConfig()
+        self._policy = RestartPolicy(wd.max_failures, wd.backoff_s)
+        self._detector = StragglerDetector(wd.straggler_z)
+        self._last_ok = True
+        self.health = {"dispatches": 0, "rollbacks": 0, "stragglers": 0,
+                       "snapshots": 0, "degraded": False}
+
+        self._build_programs()
+
+    def _build_programs(self):
+        """(Re)compile the three hot-loop programs for the current cfg/params.
+
+        Split out of ``__init__`` because the degrade-to-float fallback
+        swaps ``cfg.pim``/``params`` and must rebuild against the new tree.
+
+        With a mesh, every hot-loop program compiles with explicit in/out
+        shardings equal to the committed layouts: the donated state/ctrl
+        buffers then alias in place AND keep one stable layout across
+        calls, so steady-state decode inserts no resharding transfer
+        (asserted on HLO in tests/test_serve_sharded.py).
+        """
         pf_kw, ad_kw, self._dec_kw = {}, {}, {}
-        if mesh is not None:
+        if self.mesh is not None:
             from repro.distributed import sharding as _sh
 
+            mesh = self.mesh
             p_sh = _sh.serve_param_shardings(self.params, mesh)
             s_sh = _sh.serve_state_shardings(self.state, mesh)
             c_sh = _sh.serve_ctrl_shardings(self.ctrl, mesh)
@@ -154,19 +202,26 @@ class ServeEngine:
             self.state = jax.device_put(self.state, s_sh)
             self.ctrl = jax.device_put(self.ctrl, c_sh)
             self._shardings = (p_sh, s_sh, c_sh)
-            stream = _sh.serve_stream_sharding(mesh, max_batch)
+            stream = _sh.serve_stream_sharding(mesh, self.max_batch)
             pf_kw = dict(in_shardings=(p_sh, s_sh, repl, repl, repl),
                          out_shardings=(repl, s_sh))
             ad_kw = dict(in_shardings=(c_sh, repl, repl, repl, repl),
                          out_shardings=(c_sh, repl))
+            dec_out = (s_sh, c_sh, stream, stream)
+            if self._transient:
+                dec_out = dec_out + (repl,)        # the in-jit health flag
             self._dec_kw = dict(in_shardings=(p_sh, s_sh, c_sh),
-                                out_shardings=(s_sh, c_sh, stream, stream))
+                                out_shardings=dec_out)
 
-        self._prefill = jax.jit(partial(self._prefill_impl, cfg),
+        self._prefill = jax.jit(partial(self._prefill_impl, self.cfg),
                                 donate_argnums=(1,), **pf_kw)
         self._admit_ctrl = jax.jit(partial(self._admit_impl, self.sampler),
                                    donate_argnums=(0,), **ad_kw)
         self._decode = {}   # scan length -> jitted decode_n program
+
+    @property
+    def _transient(self) -> bool:
+        return self.faults is not None and self.faults.transient
 
     @contextlib.contextmanager
     def _activate(self):
@@ -221,10 +276,27 @@ class ServeEngine:
         return ctrl, tok
 
     @staticmethod
-    def _step_core(cfg, sampler, params, state, ctrl):
-        """One fused decode+sample step. Only (B,) tokens/flags leave jit."""
-        logits, new_state = decode_step(params, cfg,
-                                        ctrl["last_tok"][:, None], state)
+    def _step_core(cfg, sampler, params, state, ctrl, faults=None):
+        """One fused decode+sample step. Only (B,) tokens/flags leave jit.
+
+        With transient faults, a disturb key splits off the engine key and
+        the decode runs under ``read_disturb_scope`` — every bit-serial
+        matmul senses a freshly disturbed view of its planes; a fifth
+        output reports in-jit logit health (the NaN watchdog probe). With
+        ``faults=None`` the traced program is byte-identical to before.
+        """
+        if faults is not None and faults.transient:
+            from repro.pim.faults import read_disturb_scope
+
+            key0, dkey = jax.random.split(ctrl["key"])
+            ctrl = dict(ctrl, key=key0)
+            with read_disturb_scope(faults, dkey):
+                logits, new_state = decode_step(params, cfg,
+                                                ctrl["last_tok"][:, None],
+                                                state)
+        else:
+            logits, new_state = decode_step(params, cfg,
+                                            ctrl["last_tok"][:, None], state)
         key, sub = jax.random.split(ctrl["key"])
         keys = jax.random.split(sub, ctrl["last_tok"].shape[0])
         nxt = sample_per_slot(logits[:, 0], sampler, keys)
@@ -237,25 +309,37 @@ class ServeEngine:
                                         state["length"])
         ctrl = dict(ctrl, key=key, last_tok=nxt, remaining=remaining,
                     live=ctrl["live"] & ~done)
+        if faults is not None and faults.transient:
+            return new_state, ctrl, nxt, done, jnp.isfinite(logits).all()
         return new_state, ctrl, nxt, done
 
     @staticmethod
-    def _decode_impl(cfg, sampler, n, params, state, ctrl):
-        """``n`` fused decode steps per dispatch; emits (n, B) tokens/flags."""
+    def _decode_impl(cfg, sampler, faults, n, params, state, ctrl):
+        """``n`` fused decode steps per dispatch; emits (n, B) tokens/flags
+        (+ one dispatch-level health flag when transient faults are on)."""
+        transient = faults is not None and faults.transient
+
         def body(carry, _):
             st, ct = carry
-            st, ct, tok, done = ServeEngine._step_core(cfg, sampler,
-                                                       params, st, ct)
+            out = ServeEngine._step_core(cfg, sampler, params, st, ct, faults)
+            if transient:
+                st, ct, tok, done, ok = out
+                return (st, ct), (tok, done, ok)
+            st, ct, tok, done = out
             return (st, ct), (tok, done)
 
-        (state, ctrl), (toks, dones) = jax.lax.scan(
-            body, (state, ctrl), None, length=n)
+        (state, ctrl), ys = jax.lax.scan(body, (state, ctrl), None, length=n)
+        if transient:
+            toks, dones, oks = ys
+            return state, ctrl, toks, dones, oks.all()
+        toks, dones = ys
         return state, ctrl, toks, dones
 
     def _decode_fn(self, n: int):
         fn = self._decode.get(n)
         if fn is None:
-            fn = jax.jit(partial(self._decode_impl, self.cfg, self.sampler, n),
+            fn = jax.jit(partial(self._decode_impl, self.cfg, self.sampler,
+                                 self.faults, n),
                          donate_argnums=(1, 2), **self._dec_kw)
             self._decode[n] = fn
         return fn
@@ -294,7 +378,19 @@ class ServeEngine:
 
     def step(self) -> list:
         """Admit + decode (one step, or a drain of up to ``drain_steps``
-        fused steps when no admissions are pending); returns completions."""
+        fused steps when no admissions are pending); returns completions.
+
+        With a watchdog (or fault injector) armed, the dispatch runs
+        supervised: shadow snapshot -> dispatch -> health checks, with
+        rollback + backoff retry on failure and degradation to the float
+        path once the failure budget is spent (see :meth:`_step_supervised`).
+        """
+        if self.watchdog is None and self.fault_injector is None:
+            return self._step_once()
+        return self._step_supervised()
+
+    def _step_once(self) -> list:
+        """One unsupervised dispatch (the pre-watchdog ``step()`` body)."""
         self._admit()
         live = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not live:
@@ -306,8 +402,12 @@ class ServeEngine:
                              int(max(self.slot_remaining[i] for i in live))))
             n = 1 << (cap.bit_length() - 1)   # pow2 -> bounded compile count
         with self._activate():
-            self.state, self.ctrl, toks, dones = self._decode_fn(n)(
-                self.params, self.state, self.ctrl)
+            res = self._decode_fn(n)(self.params, self.state, self.ctrl)
+        if self._transient:
+            self.state, self.ctrl, toks, dones, ok = res
+            self._last_ok = bool(ok)
+        else:
+            self.state, self.ctrl, toks, dones = res
         toks = np.asarray(toks)
         dones = np.asarray(dones)
         for k in range(n):
@@ -325,35 +425,151 @@ class ServeEngine:
         out, self.done = self.done, []
         return out
 
-    def run(self, max_steps: int = 10_000) -> list:
-        """Drive until queue + slots drain; returns all completions."""
+    # -- watchdog supervision (DESIGN.md §7) --------------------------------
+
+    def _shadow(self):
+        """In-memory rollback point: device buffers copied (the dispatch
+        consumes the originals under donation) + host bookkeeping."""
+        dev = jax.tree.map(jnp.copy, {"state": self.state, "ctrl": self.ctrl})
+        return (dev, list(self.slot_req), [list(o) for o in self.slot_out],
+                self.slot_remaining.copy(), collections.deque(self.queue),
+                list(self.done))
+
+    def _restore_shadow(self, shadow):
+        dev, reqs, outs, rem, queue, done = shadow
+        self.state, self.ctrl = dev["state"], dev["ctrl"]
+        self.slot_req, self.slot_out = reqs, outs
+        self.slot_remaining, self.queue, self.done = rem, queue, done
+
+    def _step_supervised(self) -> list:
+        """Shadow -> dispatch -> health checks, rollback + retry on failure.
+
+        Failure channels: the ``fault_injector`` test hook raising, a device
+        runtime error, the in-jit non-finite-logit flag (transient faults),
+        and a dispatch exceeding ``deadline_s``. Each failure restores the
+        shadow (no token is double-emitted: completions drained by the
+        failed dispatch are part of the shadow) and retries after
+        ``RestartPolicy`` backoff; a spent budget degrades to the float
+        path (``degrade=True``) or re-raises.
+        """
+        wd = self.watchdog
+        while True:
+            shadow = self._shadow()
+            t0 = time.time()
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector(self.health["dispatches"])
+                out = self._step_once()
+                dt = time.time() - t0
+                if self._detector.observe(dt):
+                    self.health["stragglers"] += 1
+                if wd is not None and wd.deadline_s is not None \
+                        and dt > wd.deadline_s:
+                    raise RuntimeError(
+                        f"watchdog: dispatch took {dt:.3f}s "
+                        f"> deadline {wd.deadline_s}s")
+                if not self._last_ok:
+                    raise RuntimeError(
+                        "watchdog: non-finite logits in dispatch")
+            except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                self._restore_shadow(shadow)
+                self._last_ok = True
+                self.health["rollbacks"] += 1
+                try:
+                    wait = self._policy.on_failure()
+                except RuntimeError:
+                    if wd is not None and wd.degrade \
+                            and self._raw_params is not None \
+                            and getattr(self.cfg.pim, "enabled", False):
+                        print(f"[serve-watchdog] budget spent ({e!r}); "
+                              "degrading to float path", flush=True)
+                        self._degrade_to_float()
+                        continue
+                    raise
+                print(f"[serve-watchdog] dispatch failed: {e!r}; "
+                      f"rollback + retry in {wait:.2f}s", flush=True)
+                time.sleep(min(wait, 0.05))  # bounded for tests; real: full
+                continue
+            self.health["dispatches"] += 1
+            self._policy.record_progress(self.health["dispatches"])
+            if wd is not None and wd.snap_every and wd.ckpt_dir \
+                    and self.health["dispatches"] % wd.snap_every == 0:
+                self.snapshot(wd.ckpt_dir, step=self.health["dispatches"])
+                self.health["snapshots"] += 1
+            return out
+
+    def _degrade_to_float(self):
+        """Sustained fault pressure: re-deploy this bank on the float
+        fallback from the golden masters and keep serving (graceful
+        degradation instead of a crash). Decode state/ctrl carry over — the
+        KV grid is representation-independent — so in-flight generations
+        continue, now on fault-free arithmetic."""
+        from repro.training.fault_tolerance import RestartPolicy
+
+        self.cfg = dataclasses.replace(
+            self.cfg, pim=dataclasses.replace(self.cfg.pim, enabled=False))
+        self.faults = None
+        self._last_ok = True
+        self.params = prepack_params(self._raw_params, self.cfg.pim,
+                                     mesh=self.mesh)
+        self._build_programs()
+        wd = self.watchdog
+        self._policy = RestartPolicy(wd.max_failures, wd.backoff_s)
+        self.health["degraded"] = True
+
+    def run(self, max_steps: int = 10_000, strict: bool = False) -> list:
+        """Drive until queue + slots drain; returns all completions.
+
+        Exhausting ``max_steps`` with work still in flight emits a
+        ``RuntimeWarning`` naming the stranded requests — or raises when
+        ``strict=True`` — instead of returning silently as if drained.
+        """
         out = []
         for _ in range(max_steps):
             out.extend(self.step())
             if not self.queue and all(r is None for r in self.slot_req):
-                break
+                return out
+        live = [r.rid for r in self.slot_req if r is not None]
+        queued = [r.rid for r in self.queue]
+        if live or queued:
+            msg = (f"run(max_steps={max_steps}) exited with "
+                   f"{len(live) + len(queued)} stranded request(s): "
+                   f"rids {live} mid-generation, rids {queued} queued")
+            if strict:
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return out
 
     # -- fault tolerance ----------------------------------------------------
 
-    def snapshot(self, ckpt_dir: str, step: int = 0):
-        """Checkpoint device state + control block + slot bookkeeping.
+    @staticmethod
+    def _req_dict(r: Request) -> dict:
+        return {"rid": r.rid, "prompt": np.asarray(r.prompt).tolist(),
+                "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id}
 
-        Queued-but-unadmitted requests are not saved — resubmit after
-        ``restore``. Safe mid-generation: saving copies to host, it does
-        not consume the donated device buffers."""
+    @staticmethod
+    def _req_from(s: dict) -> Request:
+        return Request(rid=s["rid"], prompt=np.asarray(s["prompt"], np.int32),
+                       max_new_tokens=s["max_new_tokens"], eos_id=s["eos_id"])
+
+    def snapshot(self, ckpt_dir: str, step: int = 0):
+        """Checkpoint device state + control block + slot bookkeeping +
+        the queued-but-unadmitted requests (re-enqueued by ``restore``, so
+        nothing needs resubmitting). Safe mid-generation: saving copies to
+        host, it does not consume the donated device buffers."""
         from repro.training import checkpoint as ckpt
 
         slots = []
         for i, r in enumerate(self.slot_req):
-            slots.append(None if r is None else {
-                "rid": r.rid, "prompt": np.asarray(r.prompt).tolist(),
-                "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id,
-                "out": list(self.slot_out[i]),
-                "remaining": self.slot_remaining[i],
-            })
+            slots.append(None if r is None else dict(
+                self._req_dict(r),
+                out=list(self.slot_out[i]),
+                remaining=self.slot_remaining[i],
+            ))
         ckpt.save(ckpt_dir, step, {"state": self.state, "ctrl": self.ctrl},
-                  extra={"slots": slots, "max_batch": self.max_batch,
+                  extra={"slots": slots,
+                         "queue": [self._req_dict(r) for r in self.queue],
+                         "max_batch": self.max_batch,
                          "max_len": self.max_len})
 
     def restore(self, ckpt_dir: str, step: int | None = None):
@@ -376,9 +592,11 @@ class ServeEngine:
                 self.slot_out[i] = []
                 self.slot_remaining[i] = 0
             else:
-                self.slot_req[i] = Request(
-                    rid=s["rid"], prompt=np.asarray(s["prompt"], np.int32),
-                    max_new_tokens=s["max_new_tokens"], eos_id=s["eos_id"])
+                self.slot_req[i] = self._req_from(s)
                 self.slot_out[i] = list(s["out"])
                 self.slot_remaining[i] = s["remaining"]
+        # Re-enqueue requests that were queued but unadmitted at snapshot
+        # time (absent in pre-queue-persistence checkpoints).
+        self.queue = collections.deque(
+            self._req_from(s) for s in manifest["extra"].get("queue", []))
         return manifest

@@ -56,6 +56,7 @@ import collections
 import contextlib
 import dataclasses
 import re
+import time
 import warnings
 from functools import partial
 
@@ -116,7 +117,8 @@ class VisionEngine:
     """
 
     def __init__(self, models: dict, backend: str = "int-direct",
-                 max_batch: int = 8, mesh=None):
+                 max_batch: int = 8, mesh=None, faults=None, watchdog=None,
+                 fault_injector=None, seed: int = 0):
         if mesh is not None and backend == "pallas":
             # Same rule as ServeEngine: pallas_call has no GSPMD partitioning
             # rule, so the "model"-split planes would silently all-gather on
@@ -140,8 +142,27 @@ class VisionEngine:
         self.mesh = mesh
         self.queue: collections.deque = collections.deque()
         self._packed: dict = {}     # (model, precision) -> param tree
+        self._golden: dict = {}     # (model, precision) -> fault-free tree
         self._param_sh: dict = {}   # (model, precision) -> sharding tree
         self._fwd: dict = {}        # (model, precision, bucket) -> jitted fn
+        # Self-healing (DESIGN.md §7): persistent faults strike each
+        # (model, precision) programming pass; transient read disturb
+        # strikes every quantized dispatch via a per-dispatch key. The
+        # watchdog retries failed buckets (repairing flagged columns from
+        # the golden tree when the checksum is armed) and degrades a cohort
+        # to the float path once its failure budget is spent.
+        from repro.training.fault_tolerance import (RestartPolicy,
+                                                    WatchdogConfig)
+
+        self.faults = faults
+        self.watchdog = watchdog
+        self.fault_injector = fault_injector   # test hook: raises per dispatch
+        self._wd = wd = watchdog or WatchdogConfig()
+        self._policy = RestartPolicy(wd.max_failures, wd.backoff_s)
+        self._degraded: set = set()            # (model, precision) cohorts
+        self._fault_key = jax.random.PRNGKey(seed)
+        self.health = {"dispatches": 0, "rollbacks": 0, "repairs": 0,
+                       "repaired_cols": 0, "degraded": []}
 
     # -- mesh scoping (same contract as ServeEngine._activate) --------------
 
@@ -179,13 +200,27 @@ class VisionEngine:
                               backend=self.backend)
 
     def _packed_params(self, model: str, precision: str | None):
-        """Quantize+pack (and mesh-commit) exactly once per (model, cfg)."""
+        """Quantize+pack (and mesh-commit) exactly once per (model, cfg).
+
+        With a fault model, the freshly programmed quantized tree is
+        corrupted by the persistent fault mechanisms (each (model,
+        precision) pair gets its own key fold); the fault-free tree is kept
+        as the golden master the checksum-repair path re-programs from.
+        """
         mkey = (model, precision)
         tree = self._packed.get(mkey)
         if tree is None:
             module, params = self._models[model]
             cfg = self._cfg(precision)
             tree = _prepack_cnn(params, cfg) if cfg is not None else params
+            if cfg is not None and self.faults is not None \
+                    and self.faults.persistent:
+                from repro.pim.faults import inject_tree
+
+                self._golden[mkey] = tree
+                key = jax.random.fold_in(self.faults.key(),
+                                         len(self._golden))
+                tree, _ = inject_tree(tree, self.faults, key)
             if self.mesh is not None:
                 from repro.distributed import sharding as _sh
 
@@ -196,12 +231,35 @@ class VisionEngine:
             self._packed[mkey] = tree
         return tree
 
+    def _repair(self, model: str, precision: str | None) -> int:
+        """Checksum-scan the cohort's packed tree and re-program flagged
+        columns from the golden master (bounded by the spare budget).
+        Returns the number of repaired columns."""
+        mkey = (model, precision)
+        golden = self._golden.get(mkey)
+        if golden is None or self.faults is None or not self.faults.checksum:
+            return 0
+        from repro.pim.faults import repair_tree
+
+        tree, report = repair_tree(self._packed[mkey], golden,
+                                   self.faults.spare_cols,
+                                   self.faults.subarray_cols)
+        if self.mesh is not None:
+            tree = jax.device_put(tree, self._param_sh[mkey])
+        self._packed[mkey] = tree
+        return report["repaired_cols"]
+
+    @property
+    def _transient(self) -> bool:
+        return self.faults is not None and self.faults.transient
+
     def _fwd_fn(self, model: str, precision: str | None, bucket: int):
         key = (model, precision, bucket)
         fn = self._fwd.get(key)
         if fn is None:
             module, _ = self._models[model]
             cfg = self._cfg(precision)
+            faulty = cfg is not None and self._transient
             kw = {}
             if self.mesh is not None:
                 from repro.distributed import sharding as _sh
@@ -218,18 +276,33 @@ class VisionEngine:
                     batch_sh = _sh.serve_cnn_batch_sharding(self.mesh, bucket)
                     logits_sh = _sh.serve_cnn_logits_sharding(self.mesh,
                                                               bucket)
-                kw = dict(
-                    in_shardings=(self._param_sh[(model, precision)],
-                                  batch_sh),
-                    out_shardings=logits_sh)
-            fn = jax.jit(partial(self._fwd_impl, module.apply, cfg),
-                         donate_argnums=(1,), **kw)
+                in_sh = (self._param_sh[(model, precision)], batch_sh)
+                if faulty:
+                    in_sh = in_sh + (_sh.replicated(self.mesh),)
+                kw = dict(in_shardings=in_sh, out_shardings=logits_sh)
+            if faulty:
+                impl = partial(self._fwd_impl_faulty, module.apply, cfg,
+                               self.faults)
+            else:
+                impl = partial(self._fwd_impl, module.apply, cfg)
+            fn = jax.jit(impl, donate_argnums=(1,), **kw)
             self._fwd[key] = fn
         return fn
 
     @staticmethod
     def _fwd_impl(apply_fn, cfg, params, batch):
         return apply_fn(params, batch, cfg=cfg)
+
+    @staticmethod
+    def _fwd_impl_faulty(apply_fn, cfg, faults, params, batch, key):
+        """Quantized forward with transient read disturb armed: every
+        bit-serial weight read inside the trace draws its flip field from
+        ``key`` (same scoped-context mechanism as ``ServeEngine._step_core``,
+        so fused and im2col conv paths disturb identically)."""
+        from repro.pim.faults import read_disturb_scope
+
+        with read_disturb_scope(faults, key):
+            return apply_fn(params, batch, cfg=cfg)
 
     # -- public API ----------------------------------------------------------
 
@@ -272,6 +345,16 @@ class VisionEngine:
                 kept.append(r)
         self.queue = collections.deque(kept)
         model, precision, _ = key
+        if (model, precision) in self._degraded:
+            # Degraded cohort: serve on the float fallback path (completions
+            # keep their original rids; only the numerics path changes).
+            precision = None
+        if self.watchdog is None and self.fault_injector is None:
+            return self._dispatch(group, model, precision)
+        return self._dispatch_supervised(group, model, precision)
+
+    def _dispatch(self, group, model: str, precision: str | None) -> list:
+        bucket = len(group)
         batch = jnp.asarray(
             np.stack([np.asarray(r.image, np.float32) for r in group]))
         params = self._packed_params(model, precision)
@@ -283,7 +366,12 @@ class VisionEngine:
             # "not usable" notice instead of spamming every bucket.
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            logits = self._fwd_fn(model, precision, bucket)(params, batch)
+            fn = self._fwd_fn(model, precision, bucket)
+            if quantized and self._transient:
+                self._fault_key, dkey = jax.random.split(self._fault_key)
+                logits = fn(params, batch, dkey)
+            else:
+                logits = fn(params, batch)
         logits = np.asarray(logits)
         return [
             VisionCompletion(rid=r.rid, logits=logits[i],
@@ -291,11 +379,78 @@ class VisionEngine:
             for i, r in enumerate(group)
         ]
 
-    def run(self, max_steps: int = 10_000) -> list:
-        """Drain the queue; returns all completions."""
+    def _dispatch_supervised(self, group, model: str,
+                             precision: str | None) -> list:
+        """Supervised bucket dispatch (DESIGN.md §7): retry under backoff on
+        injected faults / device errors / non-finite logits / blown deadline,
+        attempting a checksum repair before each retry; once the failure
+        budget is spent, degrade the cohort to the float path and re-serve.
+
+        The group is held locally (already split off the queue), so a retry
+        is a pure re-dispatch — no queue surgery, no duplicated completions.
+        """
+        wd = self._wd
+        while True:
+            try:
+                t0 = time.time()
+                if self.fault_injector is not None:
+                    self.fault_injector(self.health["dispatches"])
+                out = self._dispatch(group, model, precision)
+                dt = time.time() - t0
+                if wd.deadline_s is not None and dt > wd.deadline_s:
+                    raise RuntimeError(
+                        f"vision dispatch exceeded deadline "
+                        f"({dt:.3f}s > {wd.deadline_s:.3f}s)")
+                if any(not np.isfinite(c.logits).all() for c in out):
+                    raise RuntimeError("non-finite logits in vision dispatch")
+                self.health["dispatches"] += 1
+                self._policy.record_progress(self.health["dispatches"])
+                return out
+            except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                self.health["rollbacks"] += 1
+                try:
+                    wait = self._policy.on_failure()
+                except RuntimeError:
+                    # Failure budget spent. Float path failing, or degrade
+                    # disabled: surface the error (orchestrator restarts).
+                    if precision is None or not wd.degrade:
+                        raise
+                    mkey = (model, precision)
+                    self._degraded.add(mkey)
+                    self.health["degraded"].append(mkey)
+                    from repro.training.fault_tolerance import RestartPolicy
+
+                    self._policy = RestartPolicy(wd.max_failures, wd.backoff_s)
+                    print(f"[vision-watchdog] cohort {mkey} degraded to the "
+                          f"float path after {wd.max_failures} failures",
+                          flush=True)
+                    return self._dispatch(group, model, None)
+                fixed = self._repair(model, precision)
+                if fixed:
+                    self.health["repairs"] += 1
+                    self.health["repaired_cols"] += fixed
+                print(f"[vision-watchdog] dispatch failed ({e!r}); "
+                      f"repaired {fixed} col(s), retrying in {wait:.3f}s",
+                      flush=True)
+                time.sleep(min(wait, 0.05))  # bounded for tests
+
+    def run(self, max_steps: int = 10_000, strict: bool = False) -> list:
+        """Drain the queue; returns all completions.
+
+        If the step budget runs out with requests still queued, raise
+        (``strict=True``) or emit a ``RuntimeWarning`` naming the stranded
+        rids — silent drops are how serving bugs hide.
+        """
         out = []
         for _ in range(max_steps):
             if not self.queue:
-                break
+                return out
             out.extend(self.step())
+        if self.queue:
+            rids = [r.rid for r in self.queue]
+            msg = (f"VisionEngine.run: {len(rids)} request(s) still queued "
+                   f"after {max_steps} steps (rids {rids[:8]})")
+            if strict:
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning)
         return out

@@ -126,7 +126,12 @@ def _write(ckpt_dir: str, step: int, host_leaves, paths, extra):
             f.flush()
             os.fsync(f.fileno())
         os.replace(ptr + ".tmp", ptr)
-    except BaseException:
+    except (KeyboardInterrupt, SystemExit):
+        # Propagate immediately: a Ctrl-C / interpreter exit mid-save must
+        # not be delayed (or masked by a cleanup failure). The orphaned tmp
+        # dir is harmless — LATEST never points at it.
+        raise
+    except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
 

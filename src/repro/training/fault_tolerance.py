@@ -25,6 +25,8 @@ matter, and why they are first-class here.
 """
 from __future__ import annotations
 
+import bisect
+import collections
 import dataclasses
 import math
 import time
@@ -44,31 +46,81 @@ class FTConfig:
     keep_last: int = 3
 
 
+@dataclasses.dataclass
+class WatchdogConfig:
+    """Per-dispatch supervision of a serving engine (DESIGN.md §7).
+
+    The engine's ``step()`` becomes a supervised dispatch: an in-memory
+    shadow snapshot is taken before each dispatch; a failure (injected
+    fault, device runtime error, non-finite logits, or a dispatch slower
+    than ``deadline_s``) rolls back to the shadow and retries under
+    :class:`RestartPolicy` backoff. Once the failure budget is exhausted,
+    ``degrade=True`` drops the engine to the float fallback path and keeps
+    serving instead of crashing. ``snap_every``/``ckpt_dir`` additionally
+    write durable disk snapshots every N successful dispatches.
+    """
+
+    deadline_s: float | None = None
+    max_failures: int = 3
+    backoff_s: float = 0.05
+    degrade: bool = True
+    snap_every: int = 0
+    ckpt_dir: str | None = None
+    straggler_z: float = 4.0
+
+
 class StragglerDetector:
-    """Online robust z-score over step times (median/MAD via reservoir)."""
+    """Online robust z-score over step times (median/MAD over a window).
+
+    The window is a ``deque``; an order-maintained mirror gives the median
+    in O(1) and each observation costs one ``insort`` + one eviction
+    (O(log n) search, memmove insert) instead of the former full re-sort.
+    The MAD is the k-th order statistic of ``|t - med|``, selected by a
+    two-pointer merge of the two sorted runs around the median — O(window)
+    per step, no per-step ``sorted()`` anywhere.
+    """
 
     def __init__(self, z_thresh: float = 4.0, window: int = 128):
         self.z = z_thresh
         self.window = window
-        self.times: list = []
+        self.times: collections.deque = collections.deque()
+        self._sorted: list = []
         self.flagged = 0
 
+    @staticmethod
+    def _mad(s: list, med: float) -> float:
+        # (len//2)-th smallest |t - med|: deviations of the sorted window
+        # form two sorted runs (descending below the median, ascending
+        # above); merge-select instead of building + sorting them.
+        k = len(s) // 2
+        lo = bisect.bisect_left(s, med) - 1
+        hi = lo + 1
+        dev = 0.0
+        for _ in range(k + 1):
+            left = med - s[lo] if lo >= 0 else math.inf
+            right = s[hi] - med if hi < len(s) else math.inf
+            if left <= right:
+                dev, lo = left, lo - 1
+            else:
+                dev, hi = right, hi + 1
+        return dev
+
     def observe(self, dt: float) -> bool:
-        ts = self.times
         is_straggler = False
-        if len(ts) >= 16:
-            s = sorted(ts)
+        if len(self.times) >= 16:
+            s = self._sorted
             med = s[len(s) // 2]
-            mad = sorted(abs(t - med) for t in s)[len(s) // 2]
             # sigma floor at 5% of the median: perfectly uniform histories
             # (MAD ~ 0) must not flag ordinary jitter.
-            sigma = max(1.4826 * mad, 0.05 * med, 1e-9)
+            sigma = max(1.4826 * self._mad(s, med), 0.05 * med, 1e-9)
             is_straggler = (dt - med) / sigma > self.z
             if is_straggler:
                 self.flagged += 1
-        ts.append(dt)
-        if len(ts) > self.window:
-            ts.pop(0)
+        self.times.append(dt)
+        bisect.insort(self._sorted, dt)
+        if len(self.times) > self.window:
+            old = self.times.popleft()
+            del self._sorted[bisect.bisect_left(self._sorted, old)]
         return is_straggler
 
 

@@ -1,0 +1,400 @@
+"""NAND-SPIN fault model + self-healing serving (DESIGN.md §7).
+
+Covers the contract triangle the fault subsystem promises:
+
+  * determinism — same FaultConfig + seed produce bit-identical corruption,
+    on one device and on a forced 8-device mesh (injection happens on the
+    global-shape codes before sharding);
+  * zero overhead off — a fault-free engine and a persistent-faults engine
+    trace byte-identical decode HLO (faults change stored values, never the
+    program), and mitigation never touches the clean path;
+  * recovery — checksum detection + spare-column repair restore flagged
+    columns exactly, and both serving engines survive injected mid-dispatch
+    faults (rollback + retry with token parity; degradation to the float
+    path once the failure budget is spent).
+"""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PIMQuantConfig, int_matmul_prepacked, prepack
+from repro.pim.faults import (FaultConfig, inject_packed, inject_tree,
+                              read_disturb_scope, repair_packed, repair_tree,
+                              verify_columns)
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _pw(k=96, n=48, bits=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return prepack(jnp.asarray(rng.standard_normal((k, n)), jnp.float32), bits)
+
+
+# -- deterministic injection -------------------------------------------------
+
+def test_injection_deterministic():
+    pw = _pw()
+    cfg = FaultConfig(write_ber=1e-2, retention_ber=1e-3, stuck0_rate=1e-3,
+                      stuck1_rate=1e-3, seed=3)
+    a = inject_packed(pw, cfg, cfg.key())
+    b = inject_packed(pw, cfg, cfg.key())
+    np.testing.assert_array_equal(np.asarray(a.codes), np.asarray(b.codes))
+    np.testing.assert_array_equal(np.asarray(a.planes), np.asarray(b.planes))
+    c = inject_packed(pw, cfg, FaultConfig(write_ber=1e-2, seed=4).key())
+    assert (np.asarray(a.codes) != np.asarray(c.codes)).any()
+    # corruption touched something, and col_sums stayed golden
+    assert (np.asarray(a.codes) != np.asarray(pw.codes)).any()
+    np.testing.assert_array_equal(np.asarray(a.col_sums),
+                                  np.asarray(pw.col_sums))
+
+
+_SUBPROC_INJECT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import hashlib, json
+import jax
+from repro.launch.mesh import make_serve_mesh
+from repro.models.lm import ModelConfig, init
+from repro.models.lm.model import prepack_params
+from repro.core import PIMQuantConfig
+from repro.core.packed import PackedWeight
+from repro.pim.faults import FaultConfig
+
+cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  vocab=61, remat="none", dtype="float32",
+                  pim=PIMQuantConfig(w_bits=4, a_bits=4, backend="popcount"))
+params = init(cfg, jax.random.PRNGKey(0))
+packed = prepack_params(params, cfg.pim, mesh=make_serve_mesh(2),
+                        faults=FaultConfig(write_ber=3e-3, seed=9))
+hashes = {}
+def walk(p, path):
+    if isinstance(p, PackedWeight):
+        import numpy as np
+        hashes[path] = hashlib.sha1(
+            np.asarray(jax.device_get(p.codes)).tobytes()).hexdigest()
+    elif isinstance(p, dict):
+        for k, v in p.items():
+            walk(v, f"{path}/{k}")
+    elif isinstance(p, (list, tuple)):
+        for i, v in enumerate(p):
+            walk(v, f"{path}/{i}")
+walk(packed, "")
+print(json.dumps(hashes))
+"""
+
+
+def test_injection_matches_across_device_count():
+    """Faults are drawn on the global-shape codes before sharding, so the
+    corruption pattern is a function of (config, seed) alone: an 8-device
+    mesh-sharded prepack and this process's single-device prepack hash
+    identically, leaf by leaf."""
+    from repro.core.packed import PackedWeight
+    from repro.models.lm import ModelConfig, init
+    from repro.models.lm.model import prepack_params
+
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=61, remat="none", dtype="float32",
+                      pim=PIMQuantConfig(w_bits=4, a_bits=4,
+                                         backend="popcount"))
+    params = init(cfg, jax.random.PRNGKey(0))
+    packed = prepack_params(params, cfg.pim,
+                            faults=FaultConfig(write_ber=3e-3, seed=9))
+    local = {}
+
+    def walk(p, path):
+        if isinstance(p, PackedWeight):
+            local[path] = hashlib.sha1(
+                np.asarray(jax.device_get(p.codes)).tobytes()).hexdigest()
+        elif isinstance(p, dict):
+            for k, v in p.items():
+                walk(v, f"{path}/{k}")
+        elif isinstance(p, (list, tuple)):
+            for i, v in enumerate(p):
+                walk(v, f"{path}/{i}")
+
+    walk(packed, "")
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC_INJECT],
+                         capture_output=True, text=True, env=env, cwd=_REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    remote = json.loads(out.stdout.strip().splitlines()[-1])
+    assert local and remote == local
+
+
+# -- cross-backend parity under corruption -----------------------------------
+
+def test_backend_parity_under_persistent_faults():
+    """Corruption is computed on the codes and re-rendered into every
+    stored representation, so all Eq. 1 backends agree bit-for-bit on the
+    *corrupted* product — the fault model never breaks backend parity."""
+    pw = _pw(k=64, n=32, bits=4)
+    cfg = FaultConfig(write_ber=2e-2, stuck1_rate=5e-3, seed=7)
+    bad = inject_packed(pw, cfg, cfg.key())
+    rng = np.random.default_rng(1)
+    qa = jnp.asarray(rng.integers(0, 16, size=(8, 64)), jnp.int32)
+    outs = {b: np.asarray(int_matmul_prepacked(qa, bad, 4, backend=b))
+            for b in ("int-direct", "mxu-plane", "popcount")}
+    clean = np.asarray(int_matmul_prepacked(qa, pw, 4, backend="popcount"))
+    assert (outs["popcount"] != clean).any()
+    np.testing.assert_array_equal(outs["int-direct"], outs["mxu-plane"])
+    np.testing.assert_array_equal(outs["int-direct"], outs["popcount"])
+
+
+def test_backend_parity_under_read_disturb():
+    """Inside one read_disturb_scope position, every backend sees the same
+    disturbed device state; the same (config, key) reproduces it exactly."""
+    pw = _pw(k=64, n=32, bits=4)
+    cfg = FaultConfig(read_disturb_ber=5e-3, seed=2)
+    rng = np.random.default_rng(1)
+    qa = jnp.asarray(rng.integers(0, 16, size=(8, 64)), jnp.int32)
+    key = jax.random.PRNGKey(5)
+
+    def run(backend):
+        with read_disturb_scope(cfg, key):
+            return np.asarray(int_matmul_prepacked(qa, pw, 4,
+                                                   backend=backend))
+
+    a, b, c = run("int-direct"), run("mxu-plane"), run("popcount")
+    clean = np.asarray(int_matmul_prepacked(qa, pw, 4, backend="popcount"))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+    np.testing.assert_array_equal(a, run("int-direct"))   # same key -> same
+    assert (a != clean).any()
+    with read_disturb_scope(cfg, jax.random.PRNGKey(6)):
+        other = np.asarray(int_matmul_prepacked(qa, pw, 4,
+                                                backend="popcount"))
+    assert (a != other).any()
+
+
+# -- checksum detection + spare repair ----------------------------------------
+
+def test_checksum_detects_and_repair_restores():
+    pw = _pw(k=32, n=16, bits=8)
+    cfg = FaultConfig(write_ber=1e-2, seed=0)
+    bad = inject_packed(pw, cfg, cfg.key())
+    flagged = np.asarray(verify_columns(bad))
+    assert flagged.any()
+    fixed, n_bad, n_fix = repair_packed(bad, pw, spare_cols=16)
+    assert n_bad == int(flagged.sum()) and n_fix == n_bad
+    # every flagged column restored exactly; unflagged columns untouched
+    diff = (np.asarray(fixed.codes) != np.asarray(pw.codes)).any(axis=-2)
+    assert not (diff & flagged).any()
+    assert not np.asarray(verify_columns(fixed)).any()
+
+
+def test_repair_budget_is_per_subarray():
+    pw = _pw(k=32, n=16, bits=8)
+    golden = np.asarray(pw.codes)
+    # two corrupt columns in each 8-column subarray group
+    codes = golden.copy()
+    for col in (1, 5, 9, 13):
+        codes[0, col] += 3
+    from repro.core.packed import repack_codes
+
+    bad = repack_codes(pw, jnp.asarray(codes))
+    # leaf-wide budget of 2 repairs only the first two flagged columns
+    _, n_bad, n_fix = repair_packed(bad, pw, spare_cols=2)
+    assert (n_bad, n_fix) == (4, 2)
+    # per-subarray budget of 1: one repair in EACH 8-column group
+    fixed, n_bad, n_fix = repair_packed(bad, pw, spare_cols=1,
+                                        subarray_cols=8)
+    assert (n_bad, n_fix) == (4, 2)
+    still = np.asarray(verify_columns(fixed))
+    assert list(np.nonzero(still)[0]) == [5, 13]
+
+
+def test_inject_tree_reports_and_repairs():
+    tree = {"a": _pw(seed=1), "b": [_pw(seed=2), {"w": _pw(seed=3)}]}
+    cfg = FaultConfig(write_ber=5e-3, checksum=True, spare_cols=64, seed=8)
+    out, rep = inject_tree(tree, cfg)
+    assert rep["injected"] == 3 and rep["bad_cols"] > 0
+    assert rep["repaired_cols"] == rep["bad_cols"]  # budget covers all
+    # repair_tree against the golden tree is then a no-op
+    again, rep2 = repair_tree(out, tree, 64)
+    assert rep2["repaired_cols"] == 0
+
+
+# -- zero overhead when disabled ---------------------------------------------
+
+def test_decode_hlo_identical_with_persistent_faults():
+    """Persistent faults corrupt stored values, never the traced program:
+    the decode HLO of a fault-injected engine is byte-identical to the
+    fault-free engine's. (Transient disturb is the one thing that changes
+    the program, and it is gated on cfg.transient.)"""
+    from repro.models.lm import ModelConfig, init
+    from repro.serving import SamplerConfig, ServeEngine
+
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=61, remat="none", dtype="float32")
+    params = init(cfg, jax.random.PRNGKey(0))
+
+    def hlo(faults):
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=32,
+                          sampler=SamplerConfig(temperature=0.0),
+                          faults=faults)
+        return (eng._decode_fn(4)
+                .lower(eng.params, eng.state, eng.ctrl).as_text())
+
+    assert hlo(None) == hlo(FaultConfig(write_ber=1e-2, seed=1))
+
+
+# -- self-healing LM engine ---------------------------------------------------
+
+def _lm_workload(eng):
+    from repro.serving import Request
+
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),
+               np.array([7, 8], np.int32),
+               np.array([9, 2, 6], np.int32)]
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=5))
+    return {c.rid: c.tokens for c in eng.run()}
+
+
+def test_engine_rollback_retry_token_parity():
+    """A fault injected mid-decode rolls back to the shadow snapshot and
+    retries; the served tokens are identical to the fault-free run."""
+    from repro.models.lm import ModelConfig, init
+    from repro.serving import SamplerConfig, ServeEngine
+    from repro.training.fault_tolerance import WatchdogConfig
+
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=61, remat="none", dtype="float32")
+    params = init(cfg, jax.random.PRNGKey(0))
+    base = _lm_workload(ServeEngine(cfg, params, max_batch=4, max_len=32,
+                                    sampler=SamplerConfig(temperature=0.0)))
+
+    boom = {"armed": True}
+
+    def injector(dispatch):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected mid-decode fault")
+
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=32,
+                      sampler=SamplerConfig(temperature=0.0),
+                      watchdog=WatchdogConfig(max_failures=3, backoff_s=0.01),
+                      fault_injector=injector)
+    assert _lm_workload(eng) == base
+    assert eng.health["rollbacks"] >= 1 and eng.health["dispatches"] >= 1
+    assert not eng.health["degraded"]
+
+
+def test_engine_degrades_to_float_under_sustained_faults():
+    """Once the failure budget is spent the engine drops to the float
+    fallback path and keeps serving instead of crashing."""
+    import dataclasses
+
+    from repro.models.lm import ModelConfig, init
+    from repro.serving import SamplerConfig, ServeEngine
+    from repro.training.fault_tolerance import WatchdogConfig
+
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=61, remat="none", dtype="float32",
+                      pim=PIMQuantConfig(w_bits=4, a_bits=4,
+                                         backend="int-direct"))
+    params = init(cfg, jax.random.PRNGKey(0))
+    fails = {"n": 0}
+
+    def injector(dispatch):
+        if fails["n"] < 3:
+            fails["n"] += 1
+            raise RuntimeError("sustained fault")
+
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=32,
+                      sampler=SamplerConfig(temperature=0.0),
+                      watchdog=WatchdogConfig(max_failures=2, backoff_s=0.01,
+                                              degrade=True),
+                      fault_injector=injector)
+    done = _lm_workload(eng)
+    assert sorted(done) == [0, 1, 2]
+    assert eng.health["degraded"] and not eng.cfg.pim.enabled
+
+
+# -- self-healing vision engine ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def alexnet_setup():
+    from repro.models.cnn import alexnet
+
+    key = jax.random.PRNGKey(0)
+    params = alexnet.init(key, num_classes=16, image=64)
+    imgs = [np.asarray(jax.random.normal(jax.random.fold_in(key, i),
+                                         (64, 64, 3))) for i in range(4)]
+    return alexnet, params, imgs
+
+
+def _vision_engine(alexnet_setup, **kw):
+    from repro.serving.vision import VisionEngine, VisionRequest
+
+    module, params, imgs = alexnet_setup
+    eng = VisionEngine({"alexnet": (module, params)}, backend="int-direct",
+                       max_batch=kw.pop("max_batch", 4), **kw)
+    for i, im in enumerate(imgs):
+        eng.submit(VisionRequest(rid=i, image=im, model="alexnet",
+                                 precision="<8:8>"))
+    return eng
+
+
+def test_vision_repair_on_retry(alexnet_setup):
+    """A failed bucket triggers a checksum scan: flagged columns re-program
+    from the golden tree before the retry."""
+    from repro.training.fault_tolerance import WatchdogConfig
+
+    fc = FaultConfig(write_ber=5e-3, checksum=True, spare_cols=64, seed=3)
+    boom = {"armed": True}
+
+    def injector(dispatch):
+        if dispatch == 1 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected vision fault")
+
+    eng = _vision_engine(alexnet_setup, max_batch=2, faults=fc,
+                         watchdog=WatchdogConfig(max_failures=3,
+                                                 backoff_s=0.01),
+                         fault_injector=injector)
+    done = eng.run(strict=True)
+    assert sorted(c.rid for c in done) == [0, 1, 2, 3]
+    assert eng.health["rollbacks"] >= 1
+    assert eng.health["repairs"] >= 1 and eng.health["repaired_cols"] > 0
+
+
+def test_vision_degrades_cohort_to_float(alexnet_setup):
+    """Sustained failures degrade the (model, precision) cohort to the
+    float path; its completions match the clean float engine's."""
+    from repro.training.fault_tolerance import WatchdogConfig
+
+    base = {c.rid: c.top1 for c in _vision_engine(alexnet_setup).run()}
+
+    def injector(dispatch):
+        raise RuntimeError("sustained vision fault")
+
+    fc = FaultConfig(write_ber=5e-3, checksum=True, spare_cols=64, seed=3)
+    eng = _vision_engine(alexnet_setup, faults=fc,
+                         watchdog=WatchdogConfig(max_failures=2,
+                                                 backoff_s=0.01),
+                         fault_injector=injector)
+    out = {c.rid: c.top1 for c in eng.run()}
+    assert eng.health["degraded"] == [("alexnet", "<8:8>")]
+    assert set(out) == set(base)
+    assert len(eng.queue) == 0
+
+
+def test_run_warns_on_stranded_requests(alexnet_setup):
+    import warnings
+
+    eng = _vision_engine(alexnet_setup)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng.run(max_steps=0)
+    assert any("still queued" in str(x.message) for x in w)
+    with pytest.raises(RuntimeError, match="still queued"):
+        _vision_engine(alexnet_setup).run(max_steps=0, strict=True)

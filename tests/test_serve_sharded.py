@@ -181,6 +181,41 @@ def test_decode_hlo_no_resharding(params, serve_mesh):
     assert before == after
 
 
+# -- mid-generation snapshot/restore on the serving mesh --------------------
+
+@needs8
+def test_midgen_snapshot_restore_sharded(params, serve_mesh, tmp_path):
+    """Kill-and-restore mid-generation on the (4, 2) mesh: a fresh engine
+    restored from the snapshot continues token-exactly, including requests
+    that were queued-but-unadmitted at snapshot time (queue persistence).
+    Restore commits host arrays straight to the canonical serving layout,
+    so the donated hot-loop programs accept them without resharding."""
+    def fresh():
+        return ServeEngine(CFG, params, max_batch=2, max_len=64,
+                           drain_steps=2,
+                           sampler=SamplerConfig(temperature=0.0),
+                           mesh=serve_mesh)
+
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),
+               np.array([7, 8], np.int32),
+               np.array([9, 2, 6, 5, 3], np.int32),
+               np.array([11, 12, 13], np.int32)]
+    eng = fresh()
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=6))
+    early = eng.step()   # rids 0/1 mid-generation, rids 2/3 still queued
+    assert len(eng.queue) == 2
+    eng.snapshot(str(tmp_path), step=0)
+
+    ref = {c.rid: c.tokens for c in eng.run()}           # the true future
+    eng2 = fresh()
+    eng2.restore(str(tmp_path))
+    assert len(eng2.queue) == 2
+    got = {c.rid: c.tokens for c in eng2.run()}
+    assert got == ref
+    assert set(got) | {c.rid for c in early} == {0, 1, 2, 3}
+
+
 # -- shard_map bit-serial kernel --------------------------------------------
 
 def test_bitserial_matmul_sharded_parity():

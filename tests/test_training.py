@@ -148,6 +148,40 @@ def test_straggler_detector():
     assert det.flagged == 1
 
 
+def test_straggler_detector_matches_sorted_reference():
+    """The O(log n) deque + order-maintained-mirror detector must flag
+    exactly what the straightforward full-sort-per-step implementation
+    flags, across evictions, duplicates and heavy-tailed jitter."""
+
+    class Reference:
+        def __init__(self, z=4.0, window=128):
+            self.z, self.window, self.times, self.flagged = z, window, [], 0
+
+        def observe(self, dt):
+            is_straggler = False
+            if len(self.times) >= 16:
+                s = sorted(self.times)
+                med = s[len(s) // 2]
+                mad = sorted(abs(t - med) for t in s)[len(s) // 2]
+                sigma = max(1.4826 * mad, 0.05 * med, 1e-9)
+                is_straggler = (dt - med) / sigma > self.z
+                if is_straggler:
+                    self.flagged += 1
+            self.times.append(dt)
+            if len(self.times) > self.window:
+                self.times.pop(0)
+            return is_straggler
+
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        det, ref = StragglerDetector(z_thresh=4.0), Reference(z=4.0)
+        for i in range(500):
+            dt = float(rng.choice([0.1, 0.1, 0.1, 0.1001, 0.2,
+                                   rng.lognormal(-2.0, 1.5)]))
+            assert det.observe(dt) == ref.observe(dt), (trial, i, dt)
+        assert det.flagged == ref.flagged
+
+
 def test_restart_policy_budget():
     pol = RestartPolicy(max_failures=2, backoff_s=0.01)
     assert pol.on_failure() == 0.01
