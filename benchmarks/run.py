@@ -48,6 +48,8 @@ def main(argv=None):
                                          smoke=args.smoke)
     serve_scaling = functools.partial(serve_bench.serve_device_scaling,
                                       smoke=args.smoke)
+    serve_gateway = functools.partial(serve_bench.gateway_bench,
+                                      smoke=args.smoke)
     cnn_throughput = functools.partial(cnn_bench.cnn_throughput,
                                        smoke=args.smoke)
     cnn_crosscheck = functools.partial(cnn_bench.cnn_sim_crosscheck,
@@ -75,6 +77,8 @@ def main(argv=None):
         ("serve: engine throughput (legacy vs fused hot loop)", serve_throughput),
         ("serve: device-count scaling (chips=data x banks=model mesh)",
          serve_scaling),
+        ("serve: overload gateway (Poisson mixed LM+vision load-gen)",
+         serve_gateway),
         ("cnn: vision engine throughput (batch x precision x model)",
          cnn_throughput),
         ("cnn: measured vs simulated fps (pim.calibrate cross-check)",
@@ -108,6 +112,8 @@ def main(argv=None):
                 serve_payload["serve_throughput"] = rows
             elif fn is serve_scaling:
                 serve_payload["device_scaling"] = rows
+            elif fn is serve_gateway:
+                serve_payload["gateway"] = rows
             elif fn is cnn_throughput:
                 cnn_payload["throughput"] = rows
             elif fn is cnn_crosscheck:
@@ -137,9 +143,20 @@ def main(argv=None):
             # Merge over the committed artifact so a filtered run (--only
             # matching one section) or a section failure updates its own
             # keys without destroying the rows other sections produced.
+            old = {}
             if os.path.exists(path):
                 with open(path) as fh:
-                    data = {**json.load(fh), **data}
+                    old = json.load(fh)
+                data = {**old, **data}
+            if name == "BENCH_serving.json" and old.get("device_scaling") \
+                    and not data.get("device_scaling"):
+                # Loud failure, never a silent skip: losing the committed
+                # device-scaling rows means a section-wiring bug upstream
+                # (the merge above is what preserves them on filtered runs).
+                raise RuntimeError(
+                    "refusing to rewrite BENCH_serving.json: it would drop "
+                    "the committed device_scaling rows (section produced "
+                    f"{data.get('device_scaling')!r})")
             with open(path, "w") as fh:
                 json.dump(data, fh, indent=1)
             print(f"\nwrote {path}")

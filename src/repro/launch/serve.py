@@ -23,6 +23,14 @@ import* (XLA reads the flag at backend init):
 
 With a single device (and the default ``--model-par 1``) the engines run
 exactly as before — mesh-free.
+
+``--gateway`` puts the asyncio overload gateway (DESIGN.md §8) in front of
+the LM engine: Poisson arrivals at ``--rate`` req/s into bounded per-tenant
+queues (``--queue-depth``), per-request deadlines (``--deadline-ms``), load
+shedding with retry-after hints, and a final telemetry snapshot —
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --gateway --requests 16 --rate 50 --deadline-ms 2000 --queue-depth 4
 """
 from __future__ import annotations
 
@@ -75,9 +83,90 @@ def serve_cnn(args, mesh):
           f"precision={args.precision}, backend={args.backend})")
 
 
+def serve_gateway(args, mesh, cfg, params):
+    """``--gateway``: drive the LM engine through the asyncio gateway
+    (DESIGN.md §8) with Poisson arrivals, deadlines, bounded per-tenant
+    queues, and a final telemetry snapshot."""
+    import asyncio
+
+    from repro.serving import (DeadlineExceeded, Gateway, GatewayConfig,
+                               ShedError)
+
+    eng = ServeEngine(cfg, params, max_batch=args.max_batch,
+                      max_len=args.max_len,
+                      sampler=SamplerConfig(temperature=args.temperature),
+                      mesh=mesh)
+    gw_cfg = GatewayConfig(queue_depth=args.queue_depth,
+                           default_deadline_ms=args.deadline_ms)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 17)))
+               .astype(np.int32) for _ in range(args.requests)]
+    # Warm run populates the prefill/decode compile caches so deadlines
+    # measure serving, not XLA compilation.
+    for rid, p in enumerate(prompts[:args.max_batch]):
+        eng.submit(Request(rid=rid, prompt=p,
+                           max_new_tokens=args.max_new))
+    eng.run()
+
+    async def run():
+        gw = Gateway(lm=eng, cfg=gw_cfg)
+        gw.start()
+        done = shed = expired = n_tok = 0
+
+        async def eat(rid, stream):
+            nonlocal done, expired, n_tok
+            try:
+                toks = await stream.result()
+                done += 1
+                n_tok += len(toks)
+                print(f"req {rid}: {len(toks)} tokens -> {toks[:8]}...")
+            except DeadlineExceeded:
+                expired += 1
+                print(f"req {rid}: deadline exceeded "
+                      f"({len(stream.tokens)} tokens streamed)")
+
+        tasks = []
+        t0 = time.time()
+        for rid, p in enumerate(prompts):
+            if args.rate > 0:
+                await asyncio.sleep(float(rng.exponential(1.0 / args.rate)))
+            try:
+                s = await gw.submit_lm(p, max_new_tokens=args.max_new,
+                                       tenant=f"t{rid % 2}", rid=rid)
+                tasks.append(asyncio.ensure_future(eat(rid, s)))
+            except ShedError as e:
+                shed += 1
+                print(f"req {rid}: shed ({e.reason}), "
+                      f"retry after {e.retry_after_s:.3f}s")
+        await asyncio.gather(*tasks)
+        await gw.drain(timeout=120)
+        dt = time.time() - t0
+        st = gw.stats()
+        gw.stop()
+        print(f"{done} completions ({n_tok} tokens), {shed} shed, "
+              f"{expired} expired in {dt:.1f}s ({n_tok / dt:.1f} tok/s)")
+        print(f"gateway: tier={st['tier']} "
+              f"ttft_p95={st['ttft_ms']['p95']} ms "
+              f"tpot_p95={st['tpot_ms']['p95']} ms "
+              f"max_depth={st['queue']['max_depth']}/{st['queue']['bound']} "
+              f"shed_rate={st['shed_rate']:.3f}")
+
+    asyncio.run(run())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=("lm", "cnn"), default="lm")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve through the asyncio overload gateway "
+                    "(bounded queues, deadlines, shedding; LM workload)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="gateway Poisson arrival rate in req/s "
+                    "(0 = submit everything at once)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="gateway per-request deadline")
+    ap.add_argument("--queue-depth", type=int, default=32,
+                    help="gateway bounded per-tenant queue depth")
     ap.add_argument("--arch", choices=ARCH_IDS,
                     help="LM architecture (required for --workload lm)")
     ap.add_argument("--reduced", action="store_true")
@@ -118,6 +207,9 @@ def main():
                          "musicgen/vlm need frontend-stub drivers (see examples)")
     params = cast_params(model_init(cfg, jax.random.PRNGKey(0)),
                          jnp.dtype(cfg.dtype))
+    if args.gateway:
+        serve_gateway(args, mesh, cfg, params)
+        return
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len,
                       sampler=SamplerConfig(temperature=args.temperature),

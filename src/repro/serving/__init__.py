@@ -1,8 +1,12 @@
 from .engine import Completion, Request, ServeEngine
+from .gateway import (DeadlineExceeded, Gateway, GatewayConfig, Ring,
+                      ShedError, TokenStream, VisionTicket)
 from .sampler import SamplerConfig, sample
 from .vision import VisionCompletion, VisionEngine, VisionRequest, parse_precision
 
 __all__ = [
     "Completion", "Request", "SamplerConfig", "ServeEngine", "sample",
     "VisionCompletion", "VisionEngine", "VisionRequest", "parse_precision",
+    "Gateway", "GatewayConfig", "Ring", "ShedError", "DeadlineExceeded",
+    "TokenStream", "VisionTicket",
 ]

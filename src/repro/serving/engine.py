@@ -91,6 +91,9 @@ class Request:
     prompt: np.ndarray              # (L,) int32
     max_new_tokens: int = 32
     eos_id: int = -1                # -1: never
+    deadline_ms: float | None = None   # end-to-end latency budget; enforced
+                                       # by the gateway (queued AND
+                                       # mid-generation), None = no deadline
 
 
 @dataclasses.dataclass
@@ -115,7 +118,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_len: int = 512, sampler: SamplerConfig | None = None,
                  seed: int = 0, drain_steps: int = 8, mesh=None,
-                 faults=None, watchdog=None, fault_injector=None):
+                 faults=None, watchdog=None, fault_injector=None,
+                 keep_masters: bool = False):
         self.cfg = cfg
         self.mesh = mesh
         self.faults = faults
@@ -139,9 +143,11 @@ class ServeEngine:
         # faults.checksum, repair from spares) before the tree ships.
         self.params = prepack_params(params, cfg.pim, mesh=mesh,
                                      faults=faults)
-        # The float masters survive only under supervision: they are the
-        # golden weights the degrade-to-float fallback re-deploys from.
-        self._raw_params = params if watchdog is not None else None
+        # The float masters survive under supervision (the degrade-to-float
+        # fallback re-deploys from them) or on request (``keep_masters`` —
+        # the gateway's precision-degradation tier calls :meth:`redeploy`).
+        self._raw_params = params if (watchdog is not None
+                                      or keep_masters) else None
         self.max_batch = max_batch
         self.max_len = max_len
         self.sampler = sampler or SamplerConfig()
@@ -163,6 +169,7 @@ class ServeEngine:
         self.slot_remaining = np.zeros(max_batch, np.int32)
         self.queue: collections.deque = collections.deque()
         self.done: list = []
+        self._cancelled: set = set()   # rids to release at the next boundary
 
         # Supervision state (inert unless watchdog/fault_injector set).
         from repro.training.fault_tolerance import (RestartPolicy,
@@ -346,8 +353,82 @@ class ServeEngine:
 
     # -- public API ---------------------------------------------------------
 
+    def validate(self, prompt, max_new_tokens: int):
+        """Admission-time request validation. ``_admit`` writes the prompt
+        into the (max_batch, max_len) decode grid at positions 0..L-1 and
+        each generated token's KV at the running length, so a request with
+        ``L + max_new_tokens > max_len`` would silently write past the grid
+        (``dynamic_update_slice`` clamps — the tail tokens corrupt the last
+        row instead of raising). Reject it here, with the empty prompt (no
+        logits to sample the first token from) and a non-positive budget."""
+        n = len(prompt)
+        if n == 0:
+            raise ValueError("empty prompt: nothing to prefill, no final "
+                             "logits to sample the first token from")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens={max_new_tokens} must be >= 1")
+        if n + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({n} tokens) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds the decode grid (max_len={self.max_len}); the "
+                f"overflow would clamp into the grid's last row")
+
     def submit(self, req: Request):
+        self.validate(req.prompt, req.max_new_tokens)
         self.queue.append(req)
+
+    def cancel(self, rid: int) -> str | None:
+        """Cancel a request. Queued: removed immediately. Mid-generation:
+        its slot is released at the next token boundary through the same
+        slot-free path a natural completion takes — the dead slot decodes
+        into its frozen trash position until then, and the next occupant's
+        prefill zeroes the recurrent carries (the PR 3 slot-reuse guard).
+        Returns "queued" / "active" for what was cancelled, None if the rid
+        is unknown (already completed or never submitted)."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                del self.queue[i]
+                return "queued"
+        for r in self.slot_req:
+            if r is not None and r.rid == rid:
+                self._cancelled.add(rid)
+                return "active"
+        return None
+
+    @property
+    def n_free_slots(self) -> int:
+        """Slots an admission could land in right now: free grid slots not
+        already spoken for by queued requests. The gateway uses this to
+        admit exactly what the grid can take (its own queues stay the only
+        place requests wait, so shedding decisions are centralized)."""
+        free = sum(r is None for r in self.slot_req)
+        return max(0, free - len(self.queue))
+
+    def _release_cancelled(self):
+        """Free cancelled slots at a token boundary: clear the host slot
+        (continuous batching refills it on the next ``_admit``) and kill the
+        slot's device liveness so the grid decodes it into the trash row."""
+        hit = [i for i, r in enumerate(self.slot_req)
+               if r is not None and r.rid in self._cancelled]
+        self._cancelled.clear()
+        if not hit:
+            return
+        mask = np.zeros(self.max_batch, bool)
+        mask[hit] = True
+        mask = jnp.asarray(mask)
+        ctrl = dict(self.ctrl,
+                    live=self.ctrl["live"] & ~mask,
+                    remaining=jnp.where(mask, 0, self.ctrl["remaining"]))
+        if self.mesh is not None:
+            # Keep the control block committed to the canonical layout —
+            # the hot-loop programs' in_shardings reject drifted buffers.
+            _, _, c_sh = self._shardings
+            ctrl = jax.device_put(ctrl, c_sh)
+        self.ctrl = ctrl
+        for i in hit:
+            self.slot_req[i] = None
+            self.slot_out[i] = []
+            self.slot_remaining[i] = 0
 
     def _free_slots(self):
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -385,6 +466,10 @@ class ServeEngine:
         rollback + backoff retry on failure and degradation to the float
         path once the failure budget is spent (see :meth:`_step_supervised`).
         """
+        if self._cancelled:
+            # Before the supervised shadow: a rollback must not resurrect a
+            # cancelled request (the shadow then captures post-cancel state).
+            self._release_cancelled()
         if self.watchdog is None and self.fault_injector is None:
             return self._step_once()
         return self._step_supervised()
@@ -455,12 +540,14 @@ class ServeEngine:
         wd = self.watchdog
         while True:
             shadow = self._shadow()
-            t0 = time.time()
+            # Monotonic: an NTP step of the wall clock must not blow the
+            # dispatch deadline and burn the failure budget spuriously.
+            t0 = time.monotonic()
             try:
                 if self.fault_injector is not None:
                     self.fault_injector(self.health["dispatches"])
                 out = self._step_once()
-                dt = time.time() - t0
+                dt = time.monotonic() - t0
                 if self._detector.observe(dt):
                     self.health["stragglers"] += 1
                 if wd is not None and wd.deadline_s is not None \
@@ -498,21 +585,32 @@ class ServeEngine:
                 self.health["snapshots"] += 1
             return out
 
+    def redeploy(self, pim_cfg):
+        """Re-prepack from the float masters under a new PIM config and
+        rebuild the hot-loop programs — the PR 5 degrade machinery,
+        parameterized so the gateway's degradation ladder can move a serving
+        cohort to a cheaper precision (or back) under sustained overload.
+        Decode state/ctrl carry over — the KV grid is representation-
+        independent — so in-flight generations continue on the new path.
+        Requires the float masters (``keep_masters=True`` or a watchdog)."""
+        if self._raw_params is None:
+            raise RuntimeError(
+                "redeploy needs the float masters; construct the engine "
+                "with keep_masters=True (or a watchdog)")
+        self.cfg = dataclasses.replace(self.cfg, pim=pim_cfg)
+        self.params = prepack_params(self._raw_params, pim_cfg,
+                                     mesh=self.mesh, faults=self.faults)
+        self._build_programs()
+
     def _degrade_to_float(self):
         """Sustained fault pressure: re-deploy this bank on the float
         fallback from the golden masters and keep serving (graceful
-        degradation instead of a crash). Decode state/ctrl carry over — the
-        KV grid is representation-independent — so in-flight generations
-        continue, now on fault-free arithmetic."""
+        degradation instead of a crash)."""
         from repro.training.fault_tolerance import RestartPolicy
 
-        self.cfg = dataclasses.replace(
-            self.cfg, pim=dataclasses.replace(self.cfg.pim, enabled=False))
         self.faults = None
         self._last_ok = True
-        self.params = prepack_params(self._raw_params, self.cfg.pim,
-                                     mesh=self.mesh)
-        self._build_programs()
+        self.redeploy(dataclasses.replace(self.cfg.pim, enabled=False))
         wd = self.watchdog
         self._policy = RestartPolicy(wd.max_failures, wd.backoff_s)
         self.health["degraded"] = True
@@ -545,12 +643,14 @@ class ServeEngine:
     @staticmethod
     def _req_dict(r: Request) -> dict:
         return {"rid": r.rid, "prompt": np.asarray(r.prompt).tolist(),
-                "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id}
+                "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id,
+                "deadline_ms": r.deadline_ms}
 
     @staticmethod
     def _req_from(s: dict) -> Request:
         return Request(rid=s["rid"], prompt=np.asarray(s["prompt"], np.int32),
-                       max_new_tokens=s["max_new_tokens"], eos_id=s["eos_id"])
+                       max_new_tokens=s["max_new_tokens"], eos_id=s["eos_id"],
+                       deadline_ms=s.get("deadline_ms"))
 
     def snapshot(self, ckpt_dir: str, step: int = 0):
         """Checkpoint device state + control block + slot bookkeeping +

@@ -92,6 +92,7 @@ class VisionRequest:               # field-wise __eq__ ambiguous, and the
     image: np.ndarray               # (H, W, C) float
     model: str = "resnet50"
     precision: str | None = "<8:8>"  # "<W:I>" | None (float forward)
+    deadline_ms: float | None = None  # latency budget; gateway-enforced
 
 
 @dataclasses.dataclass
@@ -316,6 +317,44 @@ class VisionEngine:
             req.precision = None
         self.queue.append(req)
 
+    def cancel(self, rid: int) -> bool:
+        """Remove a queued request (deadline expiry / caller cancel). Vision
+        dispatches are atomic — a bucket in flight has no mid-generation
+        state to release — so cancellation is queue surgery only."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                del self.queue[i]
+                return True
+        return False
+
+    @property
+    def n_free_slots(self) -> int:
+        """Admission headroom the gateway fills before the next dispatch:
+        the engine buckets at most ``max_batch`` per step, so the gateway
+        keeps at most one bucket's worth staged in the engine queue."""
+        return max(0, self.max_batch - len(self.queue))
+
+    def degrade_cohort(self, model: str, precision: str | None) -> bool:
+        """Move a (model, precision) cohort to the float fallback path —
+        the watchdog's budget-spent action, exposed as a lever for the
+        gateway's degradation ladder. Returns True if newly degraded."""
+        mkey = (model, precision)
+        if precision is None or mkey in self._degraded:
+            return False
+        self._degraded.add(mkey)
+        self.health["degraded"].append(mkey)
+        return True
+
+    def restore_cohort(self, model: str, precision: str | None) -> bool:
+        """Reverse :meth:`degrade_cohort` once load/fault pressure drops
+        (the health log keeps the transition history). Returns True if the
+        cohort was degraded."""
+        mkey = (model, precision)
+        if mkey not in self._degraded:
+            return False
+        self._degraded.discard(mkey)
+        return True
+
     def _group_key(self, req: VisionRequest):
         return (req.model, req.precision, np.asarray(req.image).shape)
 
@@ -392,11 +431,13 @@ class VisionEngine:
         wd = self._wd
         while True:
             try:
-                t0 = time.time()
+                # Monotonic: an NTP wall-clock step must not blow the
+                # dispatch deadline and burn the failure budget spuriously.
+                t0 = time.monotonic()
                 if self.fault_injector is not None:
                     self.fault_injector(self.health["dispatches"])
                 out = self._dispatch(group, model, precision)
-                dt = time.time() - t0
+                dt = time.monotonic() - t0
                 if wd.deadline_s is not None and dt > wd.deadline_s:
                     raise RuntimeError(
                         f"vision dispatch exceeded deadline "

@@ -174,13 +174,15 @@ def run_resilient(
     stats = {"restarts": 0, "stragglers": 0, "steps_run": 0}
     while step < n_steps:
         try:
-            t0 = time.time()
+            # Monotonic: straggler/deadline accounting must not see an NTP
+            # wall-clock step as a multi-second stall (or a negative time).
+            t0 = time.monotonic()
             if fail_injector is not None:
                 fail_injector(step)
             batch = put(data_source.batch(step))
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             jax.block_until_ready(metrics["loss"])
-            dt = time.time() - t0
+            dt = time.monotonic() - t0
             if detector.observe(dt):
                 stats["stragglers"] += 1
                 if on_straggler:

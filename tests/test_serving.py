@@ -209,3 +209,100 @@ def test_snapshot_restore_determinism(setup, tmp_path):
     eng2.restore(str(tmp_path))
     got = {c.rid: c.tokens for c in eng2.run()}
     assert got == want
+
+
+def test_submit_validation_rejects_grid_overflow(setup):
+    """Admission validation (gateway front line): an empty prompt, a
+    non-positive budget, or prompt + budget past the decode grid raises at
+    submit() instead of clamping into (and corrupting) the grid's last row."""
+    params = setup
+    eng = ServeEngine(CFG, params, max_batch=2, max_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=0, prompt=np.zeros(0, np.int32),
+                           max_new_tokens=4))
+    with pytest.raises(ValueError, match="must be >= 1"):
+        eng.submit(Request(rid=1, prompt=np.array([1, 2], np.int32),
+                           max_new_tokens=0))
+    with pytest.raises(ValueError, match="exceeds the decode grid"):
+        eng.submit(Request(rid=2, prompt=np.arange(30, dtype=np.int32) % 51,
+                           max_new_tokens=8))
+    assert not eng.queue, "rejected requests must not be enqueued"
+    # Boundary: L + max_new == max_len is exactly representable (the last
+    # generated token's KV lands in row max_len - 1) and must be accepted.
+    eng.submit(Request(rid=3, prompt=np.arange(28, dtype=np.int32) % 51,
+                       max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].tokens) == 4
+
+
+def test_cancel_queued_request(setup):
+    params = setup
+    eng = ServeEngine(CFG, params, max_batch=1, max_len=64)
+    eng.submit(Request(rid=0, prompt=np.array([3, 1, 4], np.int32),
+                       max_new_tokens=4))
+    eng.submit(Request(rid=1, prompt=np.array([2, 7], np.int32),
+                       max_new_tokens=4))
+    assert eng.cancel(1) == "queued"
+    assert eng.cancel(42) is None
+    done = eng.run()
+    assert [c.rid for c in done] == [0]
+
+
+def test_cancel_mid_generation_frees_slot_and_preserves_survivors(setup):
+    """Cancellation correctness (the gateway's deadline path): cancelling an
+    active request releases its slot at the next token boundary, the next
+    queued request admits into the freed slot, and every survivor's tokens
+    are bit-identical to an uncancelled solo run."""
+    params = setup
+
+    def solo(prompt, n_new):
+        e = ServeEngine(CFG, params, max_batch=2, max_len=64,
+                        sampler=SamplerConfig(temperature=0.0))
+        e.submit(Request(rid=0, prompt=prompt, max_new_tokens=n_new))
+        return e.run()[0].tokens
+
+    p_a = np.array([7, 8, 9], np.int32)
+    p_b = np.array([10, 11, 12, 13], np.int32)
+    p_c = np.array([3, 1, 4], np.int32)
+
+    eng = ServeEngine(CFG, params, max_batch=2, max_len=64,
+                      sampler=SamplerConfig(temperature=0.0), drain_steps=1)
+    eng.submit(Request(rid=1, prompt=p_a, max_new_tokens=12))
+    eng.submit(Request(rid=2, prompt=p_b, max_new_tokens=12))
+    done = eng.step()                      # both admitted, generating
+    assert not done
+    assert eng.cancel(2) == "active"
+    eng.submit(Request(rid=3, prompt=p_c, max_new_tokens=6))
+    finished = {c.rid: c.tokens for c in eng.run()}
+    assert set(finished) == {1, 3}, "cancelled rid 2 must never complete"
+    assert finished[1] == solo(p_a, 12), "survivor perturbed by the cancel"
+    assert finished[3] == solo(p_c, 6), "freed-slot occupant not bit-exact"
+    assert all(r is None for r in eng.slot_req)
+    assert eng.n_free_slots == 2
+
+
+def test_cancel_slot_reuse_zeroes_recurrent_carries():
+    """The cancel path must go through the same admission (and carry
+    zeroing) as a natural release: with an RG-LRU block, the request that
+    inherits a cancelled slot matches a fresh-engine run bit-exactly."""
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                      d_ff=64, vocab=51, remat="none", dtype="float32",
+                      block_pattern=("rglru",))
+    params = init(cfg, jax.random.PRNGKey(1))
+    p_a = np.array([9, 2, 6, 5], np.int32)
+    p_b = np.array([3, 1, 4, 1, 5], np.int32)
+
+    fresh = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                        sampler=SamplerConfig(temperature=0.0))
+    fresh.submit(Request(rid=0, prompt=p_b, max_new_tokens=6))
+    want = fresh.run()[0].tokens
+
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                      sampler=SamplerConfig(temperature=0.0), drain_steps=1)
+    eng.submit(Request(rid=1, prompt=p_a, max_new_tokens=12))
+    eng.step()                             # A generating in slot 0
+    assert eng.cancel(1) == "active"
+    eng.submit(Request(rid=2, prompt=p_b, max_new_tokens=6))
+    done = eng.run()
+    assert [c.rid for c in done] == [2]
+    assert done[0].tokens == want
