@@ -1,0 +1,100 @@
+"""Autotuner regret benchmark: picked vs exhaustive-best backend per GEMM.
+
+For every swept (m, k, n, <W:I>) point, each XLA backend runs once through
+the real prepacked dispatch (``int_matmul_prepacked``) and its wall-clock
+is memoized. The sweep then asks :func:`repro.pim.autotune.decide_gemm`
+for its pick two ways and scores both against the exhaustive best of the
+same memoized timings:
+
+  ``pick``/``regret``            mode="measure" — the deployment default
+                                 when measurement is affordable; the
+                                 injected measurer replays the memoized
+                                 times, so the regret is exact and the CI
+                                 gate (≤15% on ≥90% of points, aggregate
+                                 strictly better than the fixed default)
+                                 cannot flake on timer jitter.
+  ``pick_cost``/``regret_cost``  mode="cost" — the analytic NAND-SPIN
+                                 ranking alone, the honest column: how
+                                 good the cost model is when measuring is
+                                 off the table (fresh shapes at serve
+                                 time, cross-device caches).
+
+``fixed_ms`` is the backend a constant would have chosen — "int-direct",
+the repo-wide ``PIMQuantConfig`` default — quantifying what the autotuner
+buys over the best single setting. The pallas backend is excluded from the
+sweep on CPU: interpret mode measures the Python loop body, not a
+contender (the analytic ranker knows this too — see ``autotune._RATES``).
+
+``benchmarks.run --only autotune`` writes the rows to BENCH_kernels.json
+under ``autotune_regret``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitserial import int_matmul_prepacked
+from repro.core.packed import prepack
+from repro.pim import autotune as at
+
+SHAPES = [(4, 2048, 2048), (8, 4096, 1024), (64, 8192, 512),
+          (256, 2048, 256), (1024, 512, 1024)]
+SMOKE_SHAPES = [(4, 512, 512), (32, 1024, 256), (128, 256, 512)]
+BITS = [(2, 2), (4, 4), (8, 8)]
+FIXED = "int-direct"            # the PIMQuantConfig default backend
+
+
+def _bench(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))      # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def _measure_backends(m, k, n, a_bits, w_bits, backends, iters):
+    """One wall-clock per backend through the real prepacked dispatch."""
+    key = jax.random.PRNGKey(0)
+    qa = jax.random.randint(key, (m, k), 0, 2 ** a_bits, jnp.int32)
+    pk = prepack(jax.random.normal(jax.random.fold_in(key, 1), (k, n)),
+                 w_bits)
+    times = {}
+    for be in backends:
+        fn = jax.jit(lambda a, w, b=be: int_matmul_prepacked(
+            a, w, a_bits, backend=b))
+        times[be] = _bench(fn, qa, pk, iters=iters)
+    return times
+
+
+def autotune_regret(smoke: bool = False):
+    backends = at.XLA_BACKENDS
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    iters = 2 if smoke else 3
+    rows = []
+    for (m, k, n) in shapes:
+        for (wb, ab) in BITS:
+            times = _measure_backends(m, k, n, ab, wb, backends, iters)
+            best = min(times, key=times.get)
+            replay = lambda d, *a: times[d.backend]
+            d_cost = at.decide_gemm(m, k, n, ab, wb, backends=backends,
+                                    mode="cost", hlo_tiebreak=False)
+            d_meas = at.decide_gemm(m, k, n, ab, wb, backends=backends,
+                                    mode="measure", measure=replay,
+                                    hlo_tiebreak=False)
+            ms = {be: times[be] * 1e3 for be in backends}
+            rows.append({
+                "m_k_n": f"{m}x{k}x{n}", "W:I": f"<{wb}:{ab}>",
+                "popcount_ms": round(ms["popcount"], 3),
+                "mxu_plane_ms": round(ms["mxu-plane"], 3),
+                "int_direct_ms": round(ms["int-direct"], 3),
+                "best": best, "best_ms": round(ms[best], 3),
+                "fixed": FIXED, "fixed_ms": round(ms[FIXED], 3),
+                "pick": d_meas.backend,
+                "picked_ms": round(ms[d_meas.backend], 3),
+                "regret": round(ms[d_meas.backend] / ms[best] - 1.0, 4),
+                "pick_cost": d_cost.backend,
+                "regret_cost": round(ms[d_cost.backend] / ms[best] - 1.0, 4),
+            })
+    return rows

@@ -85,7 +85,8 @@ def cnn_throughput(smoke: bool = False):
                     base = img_s
                 rows.append({
                     "model": model, "image": image, "precision": precision,
-                    "batch": b, "n_images": n_images,
+                    "backend": "int-direct", "batch": b,
+                    "n_images": n_images,
                     "img_s": round(img_s, 2), "ms_per_image": round(ms, 2),
                     "speedup_vs_unbatched": round(img_s / base, 2),
                 })
@@ -104,7 +105,8 @@ def cnn_sim_crosscheck(smoke: bool = False):
         n = 8 if smoke else 16
         img_s, _ = _measure(params, "alexnet", 64, "<8:8>", 8, n)
         rows = [{"model": "alexnet", "image": 64, "precision": "<8:8>",
-                 "batch": 8, "img_s": round(img_s, 2)}]
+                 "backend": "int-direct", "batch": 8,
+                 "img_s": round(img_s, 2)}]
     # One cross-check row per (model, precision): the largest bucket is the
     # serving configuration; smaller buckets only quantify batching.
     best = {}

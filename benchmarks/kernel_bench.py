@@ -25,6 +25,7 @@ from repro.core import PIMQuantConfig, fuse_conv_heuristic, pim_conv2d, prepack_
 from repro.core.bitserial import int_matmul, quantized_matmul
 from repro.core.mapping import plan_matmul
 from repro.core.packed import prepack
+from repro.kernels.ops import matmul_tiles
 
 
 def _bench(fn, *args, iters=3):
@@ -34,6 +35,19 @@ def _bench(fn, *args, iters=3):
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters
+
+
+def _tiles_used(backend, m, k, n, a_bits, w_bits):
+    """The blocking a backend actually ran with, recorded per row so a
+    perf delta between artifacts is attributable to a tiling change.
+    popcount chunks output columns (core.bitserial._N_CHUNK); pallas runs
+    the legalized BlockSpec tiles; the rest are single XLA fusions."""
+    if backend == "popcount":
+        return "n_chunk=128"
+    if backend == "pallas":
+        bm, bn, bkw = matmul_tiles(m, n, -(-k // 32), a_bits, w_bits)
+        return f"bm{bm}xbn{bn}xbkw{bkw}"
+    return "xla-fused"
 
 
 def backend_comparison():
@@ -55,6 +69,7 @@ def backend_comparison():
             f = jax.jit(lambda a, w, b=backend, bb=bits: int_matmul(a, w, bb, bb, b))
             dt = _bench(f, qa, qw)
             rows.append({"W:I": f"<{bits}:{bits}>", "backend": backend,
+                         "tiles": _tiles_used(backend, m, k, n, bits, bits),
                          "m_k_n": f"{m}x{k}x{n}", "ms": round(dt * 1e3, 2),
                          "GOPS_int": round(2 * m * k * n / dt / 1e9, 1)})
     return rows
@@ -80,7 +95,9 @@ def serving_path_comparison():
         t_per = _bench(percall, a, w)
         t_cached = _bench(cached, a, pk)
         rows.append({
-            "W:I": "<8:8>", "backend": backend, "m_k_n": f"{m}x{k}x{n}",
+            "W:I": "<8:8>", "backend": backend,
+            "tiles": _tiles_used(backend, m, k, n, 8, 8),
+            "m_k_n": f"{m}x{k}x{n}",
             "per_call_ms": round(t_per * 1e3, 3),
             "cached_ms": round(t_cached * 1e3, 3),
             "speedup": round(t_per / t_cached, 2),
@@ -113,6 +130,8 @@ def fused_conv_comparison():
         rows.append({
             "NHWC/O/k": f"{n}x{h}x{h}x{c}/{o}/{kk}", "stride": stride,
             "pad": pad,
+            "im2col_backend": cfg_mat.backend,
+            "fused_bo": min(128, o),   # kernel's O block after legalization
             "im2col_ms": round(_bench(f_mat, x, pk) * 1e3, 2),
             "fused_ms_interp": round(_bench(f_fused, x, pk) * 1e3, 2),
             "im2col_HBM_KB_avoided": round(im2col_kb, 1),

@@ -41,8 +41,8 @@ def main(argv=None):
                     help="CI-scale serving benchmark (same artifact shape)")
     args = ap.parse_args(argv)
 
-    from . import (cnn_bench, fault_bench, kernel_bench, lm_roofline,
-                   paper_figures, serve_bench)
+    from . import (autotune_bench, cnn_bench, fault_bench, kernel_bench,
+                   lm_roofline, paper_figures, serve_bench)
 
     serve_throughput = functools.partial(serve_bench.serve_throughput,
                                          smoke=args.smoke)
@@ -56,6 +56,8 @@ def main(argv=None):
                                        smoke=args.smoke)
     fault_frontier = functools.partial(fault_bench.fault_frontier,
                                        smoke=args.smoke)
+    autotune_regret = functools.partial(autotune_bench.autotune_regret,
+                                        smoke=args.smoke)
     sections = [
         ("fig13a: capacity sweep", paper_figures.fig13a_capacity_sweep),
         ("fig13b: bandwidth sweep", paper_figures.fig13b_bandwidth_sweep),
@@ -71,6 +73,10 @@ def main(argv=None):
         ("kernel: fused implicit-im2col conv vs materialized",
          kernel_bench.fused_conv_comparison),
         ("kernel: BlockSpec tile plans (TPU target)", kernel_bench.tile_plan_sweep),
+        # "autotune:" (not "kernel:") so `--only kernel` stays the quick
+        # kernel sweep and `--only autotune` selects the regret bench.
+        ("autotune: picked-vs-best regret (cost model vs exhaustive)",
+         autotune_regret),
         ("roofline: single-pod 16x16 (from dry-run)", lm_roofline.roofline_table),
         ("dry-run: multi-pod 2x16x16 compile status", lm_roofline.multipod_check),
         ("perf: baseline vs optimized step-time bound", lm_roofline.baseline_vs_optimized),
@@ -93,6 +99,7 @@ def main(argv=None):
         kernel_bench.fused_conv_comparison: "fused_conv_vs_im2col",
         kernel_bench.backend_comparison: "backend_comparison",
         kernel_bench.tile_plan_sweep: "tile_plans",
+        autotune_regret: "autotune_regret",
     }
     payload = {}
     serve_payload = {}

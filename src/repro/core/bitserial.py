@@ -145,9 +145,17 @@ def int_matmul_prepacked(qa: jax.Array, w: PackedWeight, a_bits: int,
     sees a freshly disturbed view of the stored planes (STT-MRAM read
     disturb); the import is lazy and the check is a trace-time no-op when
     the scope is inactive, so fault-free programs lower to identical HLO.
+
+    A :class:`~repro.core.packed.TuneDecision` attached at prepack time
+    (``w.tune``, see :mod:`repro.pim.autotune`) overrides ``backend`` and
+    supplies Pallas tile requests — tuning redirects dispatch only; every
+    backend computes the same P bit-exactly, so the result is invariant.
     """
     from repro.pim import faults as _faults  # lazy: pim imports core
 
+    tune = w.tune
+    if tune is not None:
+        backend = tune.backend
     if _faults.read_disturb_active():
         w = _faults.disturb_packed(w)
     if backend == "int-direct":
@@ -160,8 +168,10 @@ def int_matmul_prepacked(qa: jax.Array, w: PackedWeight, a_bits: int,
     if backend == "pallas":
         from repro.kernels import ops as _kops
 
+        tiles = {} if tune is None else dict(bm=tune.bm, bn=tune.bn,
+                                             bkw=tune.bkw)
         return _kops.bitserial_matmul(qa, a_bits=a_bits, w_bits=w.bits,
-                                      pw=w.planes)
+                                      pw=w.planes, **tiles)
     raise ValueError(f"unknown backend {backend!r}")
 
 

@@ -23,6 +23,32 @@ from . import bitslice
 from .quantize import QuantParams, calibrate_minmax, dequantize, quantize
 
 
+@dataclasses.dataclass(frozen=True)
+class TuneDecision:
+    """Autotuner verdict carried as static metadata on a packed weight.
+
+    ``backend`` overrides the config's Eq. 1 execution strategy at use
+    time; ``bm``/``bn``/``bkw`` are tile *requests* for the Pallas matmul
+    kernel (legalized against the actual operand shapes by
+    ``kernels.ops.matmul_tiles``, so a decision can never produce an
+    illegal BlockSpec); ``conv_mode``/``bo`` steer ``pim_conv2d``'s
+    lowering path and fused O-block. ``None`` fields defer to the existing
+    planner/heuristic defaults — attaching ``TuneDecision()`` with only a
+    backend changes dispatch and nothing else.
+
+    Frozen + hashable: it rides the static (aux-data) side of the pytree,
+    so attaching or changing it never alters leaf buffers, shardings or
+    checkpoint layouts — only which compiled program consumes them.
+    """
+
+    backend: str = "popcount"
+    bm: int | None = None
+    bn: int | None = None
+    bkw: int | None = None
+    conv_mode: str | None = None   # "fused" | "im2col" (conv weights only)
+    bo: int | None = None          # fused-conv O block (conv weights only)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PackedWeight:
@@ -34,12 +60,17 @@ class PackedWeight:
     col_sums  (N,) int32     — sum_k codes[k, n], precomputed for the affine
               correction (Sw in quantize.py's dot-product algebra)
     wq        QuantParams    — scale/qmin/bits of the weight quantization
+    tune      TuneDecision | None — static per-weight autotuner verdict
+              (repro.pim.autotune); None keeps the config-selected backend
+              and planner-default tiles
     """
 
     codes: jax.Array
     planes: jax.Array
     col_sums: jax.Array
     wq: QuantParams
+    tune: TuneDecision | None = dataclasses.field(
+        metadata=dict(static=True), default=None)
 
     @property
     def bits(self) -> int:
@@ -70,6 +101,8 @@ class PackedConvWeight:
     fused_planes: jax.Array
     kernel_shape: tuple = dataclasses.field(metadata=dict(static=True),
                                             default=(1, 1, 1, 1))
+    tune: TuneDecision | None = dataclasses.field(
+        metadata=dict(static=True), default=None)
 
     @property
     def bits(self) -> int:
@@ -152,6 +185,7 @@ def shard_packed(pw: PackedWeight | PackedConvWeight, mesh,
             fused_planes=jax.device_put(
                 pw.fused_planes, NamedSharding(mesh, fused_spec)),
             kernel_shape=pw.kernel_shape,
+            tune=pw.tune,
         )
 
     def put(leaf, spec, field):
@@ -167,6 +201,7 @@ def shard_packed(pw: PackedWeight | PackedConvWeight, mesh,
         col_sums=put(pw.col_sums, (n_ax,), "col_sums"),
         wq=jax.tree.map(
             lambda l: jax.device_put(l, NamedSharding(mesh, P())), pw.wq),
+        tune=pw.tune,
     )
 
 
@@ -180,7 +215,7 @@ def repack_codes(pw: PackedWeight, codes: jax.Array) -> PackedWeight:
     """
     return PackedWeight(codes=codes,
                         planes=bitslice.slice_and_pack(codes.T, pw.bits),
-                        col_sums=pw.col_sums, wq=pw.wq)
+                        col_sums=pw.col_sums, wq=pw.wq, tune=pw.tune)
 
 
 def repack_conv_codes(pcw: PackedConvWeight, flat_codes: jax.Array
@@ -192,7 +227,7 @@ def repack_conv_codes(pcw: PackedConvWeight, flat_codes: jax.Array
     fused = bitslice.slice_and_pack(wt, pcw.bits).transpose(1, 0, 2, 3, 4)
     return PackedConvWeight(mat=repack_codes(pcw.mat, flat_codes),
                             fused_planes=fused,
-                            kernel_shape=pcw.kernel_shape)
+                            kernel_shape=pcw.kernel_shape, tune=pcw.tune)
 
 
 def prepack_conv(w: jax.Array, w_bits: int) -> PackedConvWeight:

@@ -207,13 +207,21 @@ def pim_conv2d(
 
     if conv_mode not in ("auto", "fused", "im2col"):
         raise ValueError(f"conv_mode {conv_mode!r}: want auto|fused|im2col")
+    # A conv-level TuneDecision (repro.pim.autotune) resolves "auto" and
+    # supplies the fused O-block; an explicit conv_mode still wins, and the
+    # im2col matmul's backend rides on w.mat.tune inside
+    # int_matmul_prepacked — tuning never changes bits, only dispatch.
+    tune = w.tune
+    if conv_mode == "auto" and tune is not None and tune.conv_mode:
+        conv_mode = tune.conv_mode
     fused = {"fused": True, "im2col": False}.get(
         conv_mode, fuse_conv_heuristic(n, oh, ow, kh, kw, c, cfg.backend))
     if fused:
         from repro.kernels import ops as _kops
 
         p = _kops.conv2d_bitserial(qx, w.fused_planes, a_bits=cfg.a_bits,
-                                   stride=stride)
+                                   stride=stride,
+                                   bo=tune.bo if tune is not None else None)
     else:
         qcols, _, _ = _im2col(qx, kh, kw, stride, 0)
         p = int_matmul_prepacked(qcols, w.mat, cfg.a_bits, cfg.backend)

@@ -45,6 +45,23 @@ def pack_planes(q: jax.Array, bits: int, interpret: bool | None = None) -> jax.A
     return _pack.bitplane_pack(q, bits=bits, bm=bm, bkw=bkw, interpret=interpret)
 
 
+def matmul_tiles(m: int, n: int, kw: int, a_bits: int, w_bits: int,
+                 bm: int | None = None, bn: int | None = None,
+                 bkw: int | None = None) -> tuple:
+    """Legal (bm, bn, bkw) blocks for an (M, N, KW-words) bit-serial matmul.
+
+    ``bm``/``bn``/``bkw`` are *requests* — autotuner overrides
+    (:class:`repro.core.packed.TuneDecision`) or caller choices; ``None``
+    falls back to the :func:`plan_matmul` planner. Every request is
+    legalized to the largest divisor of its dim, so the kernel's
+    ``_check_blocks`` precondition holds by construction for any request.
+    """
+    plan = plan_matmul(m, kw * 32, n, a_bits, w_bits)
+    return (_divisor_block(m, bm or plan.bm),
+            _divisor_block(n, bn or plan.bn),
+            _divisor_block(kw, bkw or plan.bk_words))
+
+
 def bitserial_matmul(
     qa: jax.Array,            # (M, K) int codes
     qw: jax.Array | None = None,  # (K, N) int codes (omit when pw given)
@@ -52,13 +69,18 @@ def bitserial_matmul(
     a_bits: int,
     w_bits: int,
     pw: jax.Array | None = None,  # (w_bits, N, ceil32(K)/32) prepacked planes
+    bm: int | None = None,
+    bn: int | None = None,
+    bkw: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Eq. 1 bit-serial integer matmul via the Pallas kernels -> (M, N) i32.
 
     Activation packing is fused into the matmul kernel; pass ``pw`` (the
     prepacked weight planes of a ``PackedWeight``) to make the whole product
-    a single ``pallas_call``.
+    a single ``pallas_call``. ``bm``/``bn``/``bkw`` override the planner's
+    tile choices (see :func:`matmul_tiles`); the autotuner threads its
+    decisions through here.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -74,10 +96,7 @@ def bitserial_matmul(
             f"activation K={k} exceeds packed weight K={kw * 32} words*32")
     if kw * 32 != k:
         qa = jnp.pad(qa, ((0, 0), (0, kw * 32 - k)))
-    plan = plan_matmul(m, k, n, a_bits, w_bits)
-    bm = _divisor_block(m, plan.bm)
-    bn = _divisor_block(n, plan.bn)
-    bkw = _divisor_block(kw, plan.bk_words)
+    bm, bn, bkw = matmul_tiles(m, n, kw, a_bits, w_bits, bm, bn, bkw)
     return _bsm.bitserial_matmul_fused(
         qa, pw, a_bits=a_bits, w_bits=w_bits, bm=bm, bn=bn, bkw=bkw,
         interpret=interpret,
@@ -90,12 +109,15 @@ def conv2d_bitserial(
     *,
     a_bits: int,
     stride: int = 1,
+    bo: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Implicit-im2col bit-serial conv -> P (N, OH, OW, O) int32.
 
     Packs the channel axis of the already-padded activation codes and runs
     the fused kernel; the (N*OH*OW, KH*KW*C) patch matrix is never built.
+    ``bo`` overrides the kernel's output-channel block (autotuner hook);
+    None keeps the lane-width default.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -118,8 +140,10 @@ def conv2d_bitserial(
     if pa.shape[-1] != cw:
         raise ValueError(f"channel words {pa.shape[-1]} != weight words {cw}")
     pa = pa.reshape(a_bits, n * hp, wp, cw)
+    kw_conv = {} if bo is None else {"bo": bo}
     return _conv.conv2d_bitserial_fused(
-        pa, pw, n=n, hp=hp, oh=oh, ow=ow, stride=stride, interpret=interpret)
+        pa, pw, n=n, hp=hp, oh=oh, ow=ow, stride=stride, interpret=interpret,
+        **kw_conv)
 
 
 def _divisor_block(dim: int, want: int) -> int:

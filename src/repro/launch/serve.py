@@ -59,7 +59,9 @@ def serve_cnn(args, mesh):
     params = module.init(jax.random.PRNGKey(0), image=args.image,
                          num_classes=args.classes)
     eng = VisionEngine({args.cnn_model: params}, backend=args.backend,
-                       max_batch=args.max_batch, mesh=mesh)
+                       max_batch=args.max_batch, mesh=mesh,
+                       autotune=args.autotune,
+                       tuning_cache=args.tuning_cache)
     rng = np.random.default_rng(0)
     imgs = rng.standard_normal(
         (args.requests, args.image, args.image, 3)).astype(np.float32)
@@ -95,7 +97,8 @@ def serve_gateway(args, mesh, cfg, params):
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len,
                       sampler=SamplerConfig(temperature=args.temperature),
-                      mesh=mesh)
+                      mesh=mesh, autotune=args.autotune,
+                      tuning_cache=args.tuning_cache)
     gw_cfg = GatewayConfig(queue_depth=args.queue_depth,
                            default_deadline_ms=args.deadline_ms)
     rng = np.random.default_rng(0)
@@ -187,6 +190,15 @@ def main():
                     help="'<W:I>' bit-widths, or 'float' for the fp path")
     ap.add_argument("--backend", default="int-direct",
                     choices=("int-direct", "popcount", "mxu-plane", "pallas"))
+    ap.add_argument("--autotune", default="off",
+                    choices=("off", "cost", "measure"),
+                    help="per-weight backend/tile autotuning at prepack "
+                         "(repro.pim.autotune): 'cost' ranks candidates with "
+                         "the NAND-SPIN cost model, 'measure' refines the "
+                         "finalists by wall clock")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="JSON tuning-cache file persisting autotune "
+                         "decisions across launches (default: in-memory)")
     args = ap.parse_args()
 
     mesh = None
@@ -213,7 +225,8 @@ def main():
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len,
                       sampler=SamplerConfig(temperature=args.temperature),
-                      mesh=mesh)
+                      mesh=mesh, autotune=args.autotune,
+                      tuning_cache=args.tuning_cache)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):

@@ -96,6 +96,11 @@ def crosscheck_measured(rows: list) -> list:
         out.append({
             "model": r["model"], "image": r.get("image", 224),
             "W:I": f"<{wb}:{ab}>", "batch": r.get("batch", 1),
+            # The Eq. 1 backend the measured cell actually ran (the fixed
+            # engine constant, or the autotuner's pick when the serving
+            # path was tuned) — a measured/sim shift is only attributable
+            # if the artifact records which execution strategy moved.
+            "backend": r.get("backend", "unknown"),
             "measured_img_s": round(measured, 2),
             "sim_fps": fps,
             "measured/sim": round(measured / fps, 4) if fps else None,

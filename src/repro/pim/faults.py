@@ -396,7 +396,7 @@ def disturb_packed(pw: PackedWeight) -> PackedWeight:
                               + ((0, pad),))
     return PackedWeight(codes=pw.codes ^ field.astype(pw.codes.dtype),
                         planes=pw.planes ^ planes_mask,
-                        col_sums=pw.col_sums, wq=pw.wq)
+                        col_sums=pw.col_sums, wq=pw.wq, tune=pw.tune)
 
 
 def disturb_fused_planes(fused: jax.Array, kernel_shape) -> jax.Array:

@@ -119,9 +119,16 @@ class ServeEngine:
                  max_len: int = 512, sampler: SamplerConfig | None = None,
                  seed: int = 0, drain_steps: int = 8, mesh=None,
                  faults=None, watchdog=None, fault_injector=None,
-                 keep_masters: bool = False):
+                 keep_masters: bool = False, autotune: str = "off",
+                 tuning_cache=None):
+        if autotune not in ("off", "cost", "measure"):
+            raise ValueError(
+                f"autotune {autotune!r}: want 'off' | 'cost' | 'measure'")
         self.cfg = cfg
         self.mesh = mesh
+        self.autotune = autotune
+        self._tuning_cache_arg = tuning_cache
+        self.tune_cache = None
         self.faults = faults
         self.watchdog = watchdog
         self.fault_injector = fault_injector   # test hook: raises per dispatch
@@ -141,14 +148,15 @@ class ServeEngine:
         # (banks = "model"-axis column split; DESIGN.md §5). Persistent
         # device faults strike this programming pass (and, with
         # faults.checksum, repair from spares) before the tree ships.
+        self.max_batch = max_batch
         self.params = prepack_params(params, cfg.pim, mesh=mesh,
                                      faults=faults)
+        self._maybe_autotune()
         # The float masters survive under supervision (the degrade-to-float
         # fallback re-deploys from them) or on request (``keep_masters`` —
         # the gateway's precision-degradation tier calls :meth:`redeploy`).
         self._raw_params = params if (watchdog is not None
                                       or keep_masters) else None
-        self.max_batch = max_batch
         self.max_len = max_len
         self.sampler = sampler or SamplerConfig()
         self.drain_steps = max(1, drain_steps)
@@ -184,6 +192,32 @@ class ServeEngine:
                        "snapshots": 0, "degraded": False}
 
         self._build_programs()
+
+    def _maybe_autotune(self):
+        """Attach per-weight TuneDecisions to the prepacked tree.
+
+        Runs right after prepack (``__init__`` and every :meth:`redeploy`):
+        the autotuner (repro.pim.autotune) picks backend + tiles per packed
+        GEMM for this deployment's decode shape (m = max_batch) and records
+        them in the tuning cache. Decisions are static pytree metadata —
+        shardings, donation and checkpoint layouts are untouched; only
+        which compiled program runs changes. The candidate set comes from
+        ``autotune.default_backends(mesh)``, which already excludes pallas
+        wherever the engine's own backend validation would (no GSPMD rule
+        under a mesh, interpret-only off-TPU).
+        """
+        if self.autotune == "off" or not getattr(self.cfg.pim, "enabled",
+                                                 False):
+            return
+        from repro.pim import autotune as _at
+
+        if self.tune_cache is None:
+            self.tune_cache = _at.as_cache(self._tuning_cache_arg)
+        self.params = _at.tune_tree(
+            self.params, m_hint=self.max_batch,
+            a_bits=self.cfg.pim.a_bits,
+            backends=_at.default_backends(self.mesh),
+            mode=self.autotune, cache=self.tune_cache)
 
     def _build_programs(self):
         """(Re)compile the three hot-loop programs for the current cfg/params.
@@ -600,6 +634,7 @@ class ServeEngine:
         self.cfg = dataclasses.replace(self.cfg, pim=pim_cfg)
         self.params = prepack_params(self._raw_params, pim_cfg,
                                      mesh=self.mesh, faults=self.faults)
+        self._maybe_autotune()   # new precision -> fresh (cached) decisions
         self._build_programs()
 
     def _degrade_to_float(self):
@@ -666,11 +701,16 @@ class ServeEngine:
                 out=list(self.slot_out[i]),
                 remaining=self.slot_remaining[i],
             ))
+        extra = {"slots": slots,
+                 "queue": [self._req_dict(r) for r in self.queue],
+                 "max_batch": self.max_batch,
+                 "max_len": self.max_len}
+        if self.tune_cache is not None:
+            # Tuning decisions ride the manifest so a restored engine skips
+            # re-ranking (and re-measuring) every deployment GEMM.
+            extra["tuning"] = self.tune_cache.to_extra()
         ckpt.save(ckpt_dir, step, {"state": self.state, "ctrl": self.ctrl},
-                  extra={"slots": slots,
-                         "queue": [self._req_dict(r) for r in self.queue],
-                         "max_batch": self.max_batch,
-                         "max_len": self.max_len})
+                  extra=extra)
 
     def restore(self, ckpt_dir: str, step: int | None = None):
         """Resume mid-generation from :meth:`snapshot` (same cfg/geometry)."""
@@ -699,4 +739,6 @@ class ServeEngine:
         # time (absent in pre-queue-persistence checkpoints).
         self.queue = collections.deque(
             self._req_from(s) for s in manifest["extra"].get("queue", []))
+        if self.tune_cache is not None:
+            self.tune_cache.merge_extra(manifest["extra"].get("tuning"))
         return manifest

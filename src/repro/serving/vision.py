@@ -119,7 +119,11 @@ class VisionEngine:
 
     def __init__(self, models: dict, backend: str = "int-direct",
                  max_batch: int = 8, mesh=None, faults=None, watchdog=None,
-                 fault_injector=None, seed: int = 0):
+                 fault_injector=None, seed: int = 0, autotune: str = "off",
+                 tuning_cache=None):
+        if autotune not in ("off", "cost", "measure"):
+            raise ValueError(
+                f"autotune {autotune!r}: want 'off' | 'cost' | 'measure'")
         if mesh is not None and backend == "pallas":
             # Same rule as ServeEngine: pallas_call has no GSPMD partitioning
             # rule, so the "model"-split planes would silently all-gather on
@@ -141,6 +145,16 @@ class VisionEngine:
         self.backend = backend
         self.max_batch = 1 << (max(1, max_batch).bit_length() - 1)
         self.mesh = mesh
+        # Autotune (repro.pim.autotune): conv GEMM shapes depend on the
+        # image size, known only at dispatch, so tuned trees are derived
+        # lazily per (model, precision, image-hw, bucket) — cheap static-
+        # metadata wrappers over the packed tree, cached in ``_tuned``.
+        # Vision always ranks by cost model (measurement is a GEMM-level
+        # facility; the "measure" knob still upgrades the FC decisions).
+        self.autotune = autotune
+        self._tuning_cache_arg = tuning_cache
+        self.tune_cache = None
+        self._tuned: dict = {}      # (model, precision, h, w, bucket) -> tree
         self.queue: collections.deque = collections.deque()
         self._packed: dict = {}     # (model, precision) -> param tree
         self._golden: dict = {}     # (model, precision) -> fault-free tree
@@ -248,14 +262,55 @@ class VisionEngine:
         if self.mesh is not None:
             tree = jax.device_put(tree, self._param_sh[mkey])
         self._packed[mkey] = tree
+        # Tuned wrappers hold references to the pre-repair arrays; drop
+        # them so the next dispatch re-derives from the repaired tree (the
+        # decisions themselves come back instantly from the tuning cache).
+        self._tuned = {k: v for k, v in self._tuned.items()
+                       if k[:2] != mkey}
         return report["repaired_cols"]
+
+    def _tuned_params(self, model: str, precision: str | None, shape):
+        """Tuned view of the packed tree for one (cohort, image, bucket).
+
+        Decisions are per-GEMM: FC weights tune on the bucket's row count,
+        conv weights on the im2col row bound ``batch * H * W`` (the
+        stride-1 upper bound — the backend crossover is driven by the
+        plane-pair count, which the bound preserves). Attaching decisions
+        is ``dataclasses.replace`` on static metadata, so the committed
+        (possibly mesh-sharded) buffers are reused as-is.
+        """
+        n, h, w, _ = shape
+        tkey = (model, precision, h, w, n)
+        tree = self._tuned.get(tkey)
+        if tree is None:
+            from repro.pim import autotune as _at
+
+            if self.tune_cache is None:
+                self.tune_cache = _at.as_cache(self._tuning_cache_arg)
+            bits = parse_precision(precision)
+            tree = _at.tune_tree(
+                self._packed[(model, precision)], m_hint=n, a_bits=bits[1],
+                backends=_at.default_backends(self.mesh),
+                mode=self.autotune if self.autotune != "off" else "cost",
+                cache=self.tune_cache, conv_m_hint=n * h * w)
+            self._tuned[tkey] = tree
+        return tree
 
     @property
     def _transient(self) -> bool:
         return self.faults is not None and self.faults.transient
 
-    def _fwd_fn(self, model: str, precision: str | None, bucket: int):
+    def _fwd_fn(self, model: str, precision: str | None, bucket: int,
+                params=None):
+        # Tuned trees differ from the base packed tree only in static
+        # TuneDecision metadata, but that metadata IS part of the treedef —
+        # key the compiled program (and build its in_shardings) from the
+        # actual tree being dispatched so decisions recompile cleanly.
+        # The untuned path keeps the historical 3-tuple key (one compile
+        # per (model, precision, bucket)); tuned trees append their treedef.
         key = (model, precision, bucket)
+        if params is not None:
+            key = key + (jax.tree_util.tree_structure(params),)
         fn = self._fwd.get(key)
         if fn is None:
             module, _ = self._models[model]
@@ -277,7 +332,13 @@ class VisionEngine:
                     batch_sh = _sh.serve_cnn_batch_sharding(self.mesh, bucket)
                     logits_sh = _sh.serve_cnn_logits_sharding(self.mesh,
                                                               bucket)
-                in_sh = (self._param_sh[(model, precision)], batch_sh)
+                p_sh = self._param_sh[(model, precision)]
+                if params is not None:
+                    # Mirror the committed shardings onto the dispatched
+                    # tree's structure (identical leaves, tuned treedef).
+                    p_sh = _sh.serve_cnn_param_shardings(
+                        params, self.mesh, quantized=cfg is not None)
+                in_sh = (p_sh, batch_sh)
                 if faulty:
                     in_sh = in_sh + (_sh.replicated(self.mesh),)
                 kw = dict(in_shardings=in_sh, out_shardings=logits_sh)
@@ -398,6 +459,8 @@ class VisionEngine:
             np.stack([np.asarray(r.image, np.float32) for r in group]))
         params = self._packed_params(model, precision)
         quantized = parse_precision(precision) is not None
+        if quantized and self.autotune != "off":
+            params = self._tuned_params(model, precision, batch.shape)
         with self._activate(quantized), warnings.catch_warnings():
             # The donated image batch cannot alias the (much smaller) logits
             # output on every backend; the donation is still declared so
@@ -405,7 +468,9 @@ class VisionEngine:
             # "not usable" notice instead of spamming every bucket.
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            fn = self._fwd_fn(model, precision, bucket)
+            fn = self._fwd_fn(
+                model, precision, bucket,
+                params if quantized and self.autotune != "off" else None)
             if quantized and self._transient:
                 self._fault_key, dkey = jax.random.split(self._fault_key)
                 logits = fn(params, batch, dkey)

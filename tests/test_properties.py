@@ -130,3 +130,37 @@ def test_compressed_psum_errorbound(bits, seed):
     assert float(jnp.abs(g_hat - g).max()) <= step * 0.5 + 1e-6
     # error feedback: residual equals exactly what was lost
     assert jnp.allclose(g_hat + err, g, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 300), n=st.integers(1, 300), kw=st.integers(1, 64),
+       ab=st.integers(1, 8), wb=st.integers(1, 8),
+       bm=st.one_of(st.none(), st.integers(1, 512)),
+       bn=st.one_of(st.none(), st.integers(1, 512)),
+       bkw=st.one_of(st.none(), st.integers(1, 512)))
+def test_autotune_tile_requests_always_legal(m, n, kw, ab, wb, bm, bn, bkw):
+    """Any tile request — autotuner decision or caller whim — legalizes to
+    blocks the Pallas kernel's ``_check_blocks`` accepts: the tuned path
+    can never produce an illegal BlockSpec."""
+    from repro.kernels.bitserial_matmul import _check_blocks
+    from repro.kernels.ops import matmul_tiles
+
+    lb, ln, lk = matmul_tiles(m, n, kw, ab, wb, bm, bn, bkw)
+    _check_blocks(m, n, kw, lb, ln, lk)    # must not raise
+    assert 1 <= lb <= m and 1 <= ln <= n and 1 <= lk <= kw
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 64), k=st.integers(1, 512), n=st.integers(1, 256),
+       ab=st.sampled_from([2, 4, 8]), wb=st.sampled_from([2, 4, 8]))
+def test_autotune_decision_deterministic(m, k, n, ab, wb):
+    """decide_gemm is a pure function of (shape, precision, candidate set):
+    rerunning it — fresh or through a warm cache — returns the same pick."""
+    from repro.pim import autotune as at
+
+    cache = at.TuningCache(None)
+    d1 = at.decide_gemm(m, k, n, ab, wb, cache=cache, hlo_tiebreak=False)
+    d2 = at.decide_gemm(m, k, n, ab, wb, cache=cache, hlo_tiebreak=False)
+    d3 = at.decide_gemm(m, k, n, ab, wb, hlo_tiebreak=False)
+    assert d1 == d2 == d3
+    assert d1.backend in at.XLA_BACKENDS
