@@ -19,7 +19,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import PIMQuantConfig, fuse_conv_heuristic, pim_conv2d, prepack_conv2d
 from repro.core.bitserial import int_matmul, quantized_matmul

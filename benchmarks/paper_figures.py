@@ -7,8 +7,7 @@ from __future__ import annotations
 
 from repro.pim.area import add_on_area_mm2, chip_area_mm2
 from repro.pim.baselines import (
-    COUNTERPARTS, MODELS, WI_CONFIGS, counterpart_fps, energy_table,
-    speedup_table,
+    COUNTERPARTS, MODELS, WI_CONFIGS, energy_table, speedup_table,
 )
 from repro.pim.calibrate import PAPER_CLAIMS
 from repro.pim.hierarchy import Geometry

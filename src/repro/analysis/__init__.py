@@ -1,0 +1,21 @@
+"""Hot-path static analysis: jaxpr/HLO invariant linting (DESIGN.md §10).
+
+Engines declare their jitted programs and budgets via the
+:class:`HotPath` API; the rule registry (``repro.analysis.rules``) checks
+collective budgets, donation aliasing, dtype discipline, host-sync
+freedom, recompile hazards and tile legality against the *compiled*
+executables. ``python -m repro.analysis lint`` gates every registered
+program in CI at 1- and 8-device topologies; the serving test suites
+call the same rule implementations directly.
+"""
+from repro.analysis import hlo, threads
+from repro.analysis.hotpath import (Budget, HotPath, Program, Violation,
+                                    format_report, iter_hot_paths,
+                                    lint_hot_paths, lint_registered,
+                                    register, registered, unregister)
+from repro.analysis.rules import RULES, run_rules
+
+__all__ = ["Budget", "HotPath", "Program", "Violation", "RULES", "hlo",
+           "threads", "format_report", "iter_hot_paths", "lint_hot_paths",
+           "lint_registered", "register", "registered", "unregister",
+           "run_rules"]

@@ -1,0 +1,128 @@
+"""CLI lint gate: build the serving hot paths and run the rule registry.
+
+  PYTHONPATH=src python -m repro.analysis lint --workload lm --mesh 4x2
+  PYTHONPATH=src python -m repro.analysis lint --workload all --mesh 1x1
+
+``--mesh AxB`` forces an A*B-device host topology *before jax imports*
+(XLA reads --xla_force_host_platform_device_count at backend init) and
+serves with B-way model parallelism — the same mesh shape the serving
+launcher builds. ``1x1`` lints the mesh-free single-device programs.
+
+Exit status 1 on any rule violation; the report names each offending
+``<hotpath>:<program>`` and rule. CI runs this at 1 and 8 devices (the
+lint-hotpath job) so every registered program is gated on both
+topologies.
+"""
+import argparse
+import os
+import sys
+
+
+def _parse_mesh(spec: str):
+    try:
+        data, model = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh {spec!r}: want AxB, e.g. 4x2")
+    if data < 1 or model < 1:
+        raise SystemExit(f"--mesh {spec!r}: dims must be >= 1")
+    return data, model
+
+
+def _build_lm(mesh, max_batch):
+    import jax
+
+    from repro.core.pim_layers import PIMQuantConfig
+    from repro.models.lm import ModelConfig, init
+    from repro.serving import SamplerConfig, ServeEngine
+
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=61, remat="none", dtype="float32",
+                      pim=PIMQuantConfig(w_bits=4, a_bits=4,
+                                         backend="int-direct"))
+    params = init(cfg, jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_batch=max_batch, max_len=64,
+                       sampler=SamplerConfig(temperature=0.0), mesh=mesh)
+
+
+def _build_cnn(mesh, max_batch):
+    import jax
+    import numpy as np
+
+    from repro.serving import VisionEngine, VisionRequest
+    from repro.serving.vision import MODEL_ZOO
+
+    module = MODEL_ZOO["alexnet"]
+    params = module.init(jax.random.PRNGKey(0), image=64, num_classes=16)
+    eng = VisionEngine({"alexnet": params}, backend="int-direct",
+                       max_batch=max_batch, mesh=mesh)
+    rng = np.random.default_rng(0)
+    imgs = rng.standard_normal((max_batch, 64, 64, 3)).astype(np.float32)
+    for rid in range(max_batch):
+        eng.submit(VisionRequest(rid=rid, image=imgs[rid],
+                                 model="alexnet", precision="<4:4>"))
+    eng.run()   # records the dispatched bucket shapes hot_paths() lints
+    return eng
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    lint = sub.add_parser("lint", help="lint registered hot paths")
+    lint.add_argument("--workload", choices=("lm", "cnn", "all"),
+                      default="all")
+    lint.add_argument("--mesh", default="1x1", metavar="AxB",
+                      help="data x model host topology (forced via "
+                      "XLA_FLAGS before jax import); 1x1 = mesh-free")
+    lint.add_argument("--max-batch", type=int, default=4)
+    lint.add_argument("--rules", default=None,
+                      help="comma-separated rule subset (default: all)")
+    args = ap.parse_args(argv)
+
+    data, model = _parse_mesh(args.mesh)
+    n_dev = data * model
+    if n_dev > 1 and "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={n_dev}"
+                .strip())
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    import jax
+
+    from repro import analysis
+
+    if len(jax.devices()) < n_dev:
+        raise SystemExit(f"--mesh {args.mesh} needs {n_dev} devices, have "
+                         f"{len(jax.devices())} (jax imported before the "
+                         f"XLA_FLAGS force?)")
+    mesh = None
+    if n_dev > 1:
+        from repro.launch.mesh import make_serve_mesh
+
+        mesh = make_serve_mesh(model)
+
+    engines = []
+    if args.workload in ("lm", "all"):
+        engines.append(_build_lm(mesh, args.max_batch))
+    if args.workload in ("cnn", "all"):
+        engines.append(_build_cnn(mesh, args.max_batch))
+
+    rules = args.rules.split(",") if args.rules else None
+    violations = analysis.lint_registered(rules=rules)
+    # The gateway has no jitted programs; its hot-path contract is the
+    # thread-ownership rule, linted on the module AST every run.
+    violations += analysis.threads.check_gateway()
+
+    n_progs = sum(len(hp.programs) for hp in analysis.iter_hot_paths())
+    print(f"linted {n_progs} program(s) across "
+          f"{len(analysis.registered())} engine(s) on {n_dev} device(s) "
+          f"+ gateway thread-ownership")
+    print(analysis.format_report(violations))
+    for eng in engines:
+        eng.close()
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,198 @@
+"""Shared HLO/jaxpr text inspection helpers.
+
+One home for the regexes that every hot-path invariant rests on: the
+serving tests (tests/test_serve_sharded.py, tests/test_vision_engine.py),
+the rule registry (repro.analysis.rules) and the CI lint gate all call
+these — so the test suite and the ``python -m repro.analysis lint`` gate
+can never drift apart on what counts as a collective, an alias, or a
+host round-trip.
+
+Everything here is pure text/jaxpr analysis: no compilation, no device
+work. Callers hand in ``fn.lower(*args).compile().as_text()`` dumps (see
+``compiled_text``) or jaxprs from ``jax.make_jaxpr``.
+"""
+from __future__ import annotations
+
+import re
+
+# Mirrors roofline.hlo_cost._DTYPE_BYTES; kept tiny and local so text
+# helpers stay importable without jax.
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+               "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+               "u64": 8}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "all-to-all",
+                  "collective-permute")
+
+# Host-callback custom-call targets XLA emits for jax.pure_callback /
+# jax.debug.callback / io_callback (CPU and GPU spellings).
+_CALLBACK_TARGETS = ("xla_python_cpu_callback", "xla_python_gpu_callback",
+                     "xla_ffi_python_cpu_callback",
+                     "xla_ffi_python_gpu_callback")
+
+
+def gather_sizes(txt: str) -> list[int]:
+    """Byte size of every all-gather result in an HLO text dump."""
+    out = []
+    for m in re.finditer(r"= (\w+)\[([\d,]*)\][^a-zA-Z]*all-gather", txt):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        out.append(n * DTYPE_BYTES.get(m.group(1), 4))
+    return out
+
+
+def collective_counts(txt: str) -> dict[str, int]:
+    """Textual (not trip-count-multiplied) collective op counts.
+
+    Textual counts are the scan-length-flatness currency: a decode program
+    whose per-step body gathers once shows ``n`` all-gathers at drain
+    length ``n`` after unrolling — flat textual counts across the pow2
+    drain family prove the collectives live outside the scan body.
+    """
+    return {op: len(re.findall(r"= \S+ " + op.replace("-", "[-]") + r"\(",
+                               txt))
+            for op in COLLECTIVE_OPS}
+
+
+def input_output_aliases(txt: str) -> set[int]:
+    """Parameter numbers the compiled module aliases into its outputs.
+
+    jax requests (may-)aliasing for every donated buffer it can pair with
+    an output; donations it cannot use are silently dropped from the
+    ``input_output_alias={...}`` header — so a donated argnum whose
+    parameters are absent here fell back to a copy.
+    """
+    i = txt.find("input_output_alias=")
+    if i < 0:
+        return set()
+    j = txt.index("{", i)
+    depth, end = 0, -1
+    for k in range(j, len(txt)):
+        if txt[k] == "{":
+            depth += 1
+        elif txt[k] == "}":
+            depth -= 1
+            if depth == 0:
+                end = k
+                break
+    if end < 0:
+        return set()
+    return {int(p) for p in re.findall(r":\s*\((\d+),", txt[j:end + 1])}
+
+
+def entry_param_count(txt: str) -> int | None:
+    """Number of parameters of the ENTRY computation (None if unparsable).
+
+    Needed to detect dropped/pruned arguments: jit prunes unused args from
+    the executable, which would silently shift the param->argnum mapping
+    the donation rule depends on.
+    """
+    m = re.search(r"^ENTRY [^(]*\((.*)\) -> ", txt, re.M)
+    if m is None:
+        return None
+    sig = m.group(1).strip()
+    if not sig:
+        return 0
+    depth, count = 0, 1
+    for ch in sig:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            count += 1
+    return count
+
+
+def host_callback_sites(txt: str) -> list[str]:
+    """Host round-trips in a compiled dump: python-callback custom calls,
+    infeed/outfeed, and host-transfer send/recv."""
+    out = []
+    for tgt in _CALLBACK_TARGETS:
+        out += [f'custom-call {tgt}'] * txt.count(
+            f'custom_call_target="{tgt}"')
+    for op in ("infeed", "outfeed"):
+        out += [op] * len(re.findall(r"= \S+ " + op + r"\(", txt))
+    out += ["host send/recv"] * len(
+        re.findall(r"= \S+ (?:send|recv)\([^)]*\), [^\n]*is_host_transfer="
+                   r"true", txt))
+    return out
+
+
+def has_f64(txt: str) -> bool:
+    return "f64[" in txt
+
+
+def f32_matmul_eqns(jaxpr) -> list[str]:
+    """f32-result matmul/conv primitives in the trace — the upcasts a
+    declared-bf16 region must not contain. Checked on the jaxpr, not the
+    compiled HLO: XLA CPU legitimately *accumulates* bf16 matmuls in f32,
+    but a program whose traced dot operates on f32 avals means user code
+    upcast the operands."""
+    import numpy as np
+
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name not in ("dot_general",
+                                      "conv_general_dilated"):
+            continue
+        aval = getattr(eqn.outvars[0], "aval", None)
+        if aval is not None and getattr(aval, "dtype", None) == np.float32:
+            out.append(eqn.primitive.name)
+    return out
+
+
+# -- jaxpr-side helpers ------------------------------------------------------
+
+def iter_eqns(jaxpr):
+    """All equations of a (closed) jaxpr, recursing into sub-jaxprs
+    (pjit/scan/while/cond bodies)."""
+    jx = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jx.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    yield from iter_eqns(sub)
+
+
+def callback_primitives(jaxpr) -> list[str]:
+    """Names of callback/infeed/outfeed primitives anywhere in the trace."""
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if "callback" in name or name in ("infeed", "outfeed"):
+            out.append(name)
+    return out
+
+
+def plane_float_converts(jaxpr) -> list[str]:
+    """convert_element_type sites that move a packed uint32 plane (>= 2-d)
+    into a float dtype — bit planes are opaque words; any float view of
+    them is a layout bug.  1-d/scalar u32 (PRNG keys, counters) pass."""
+    import numpy as np
+
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        (inv,), (outv,) = eqn.invars, eqn.outvars
+        ia, oa = getattr(inv, "aval", None), getattr(outv, "aval", None)
+        if ia is None or oa is None or not hasattr(ia, "dtype"):
+            continue
+        if (ia.dtype == np.uint32 and ia.ndim >= 2
+                and np.issubdtype(oa.dtype, np.floating)):
+            out.append(f"convert {ia.str_short()} -> {oa.str_short()}")
+    return out
+
+
+def lowered_text(fn, *args, **kwargs) -> str:
+    """Stable-lowering fingerprint (pre-optimization StableHLO text)."""
+    return fn.lower(*args, **kwargs).as_text()
+
+
+def compiled_text(fn, *args, **kwargs) -> str:
+    """Optimized HLO of the compiled executable — what the rules inspect."""
+    return fn.lower(*args, **kwargs).compile().as_text()

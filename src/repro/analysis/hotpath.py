@@ -1,0 +1,191 @@
+"""HotPath declarations: what a serving engine promises about its compiled
+programs, in a form the rule registry can check.
+
+An engine (ServeEngine, VisionEngine) exposes ``hot_paths()`` returning
+:class:`HotPath` objects — each one a named family of jitted programs plus
+a :class:`Budget` declaring the invariants its hot loop depends on
+(collective budget, donation aliasing, dtype discipline, ...). Engines
+register themselves at construction and unregister in ``close()``; the
+CLI (``python -m repro.analysis lint``) and the CI gate lint every live
+registration, and the test suites call :func:`lint_hot_paths` directly on
+a single engine.
+
+Programs lower and compile lazily, under the hot path's own context
+(``engine._activate`` — the mesh/layout scope the real dispatch uses), so
+what the rules inspect is byte-for-byte the executable the hot loop runs.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import weakref
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One rule violation, attributed to a program of a hot path."""
+
+    program: str          # "lm.decode:n=8" — hot path name + program label
+    rule: str             # registry name, e.g. "collective-budget"
+    message: str
+
+    def __str__(self):
+        return f"{self.program}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """Per-hot-path invariant declaration the rules check against.
+
+    collectives       max textual count per compiled program for each
+                      collective kind (missing kind = unconstrained).
+    max_gather_bytes  largest all-gather result allowed (None = no bound;
+                      0 = fully replicated, no gathers at all). The 16 KiB
+                      serving default separates KB-scale control
+                      broadcasts from KV-cache/weight-sized resharding.
+    scan_flat         with >1 program in the family, textual collective
+                      counts must be identical across all of them (the
+                      drain-length-flatness invariant of DESIGN.md §5).
+    donate            argnums whose every leaf must be aliased in the
+                      compiled executable (donation actually honored, not
+                      silently copied). Donations that exist only to free
+                      the input buffer (vision's image batch) stay out.
+    compute_dtype     "bf16" forbids f32 dot/convolution results in the
+                      compiled program; None disables the upcast check.
+    allow_f64/allow_host_sync/check_weak_scalars  rule switches.
+    m_hint            GEMM row count of this deployment (decode slot count
+                      / bucket rows) — the tile-legality rule checks
+                      autotuner tile requests divide against it.
+    pallas_ok         False when the context shards a mesh (pallas_call
+                      has no GSPMD rule; a pallas TuneDecision would
+                      silently all-gather every step).
+    """
+
+    collectives: tuple = (("all-to-all", 0),)
+    max_gather_bytes: int | None = 16384
+    scan_flat: bool = True
+    donate: tuple = ()
+    compute_dtype: str | None = None
+    allow_f64: bool = False
+    allow_host_sync: bool = False
+    check_weak_scalars: bool = True
+    m_hint: int | None = None
+    pallas_ok: bool = True
+
+
+class Program:
+    """One jitted program of a hot path: a label, the jitted callable and
+    example args. Lowers/compiles lazily (once) under the owning hot
+    path's context; test harnesses may inject ``text=`` directly to unit-
+    test rule logic without compiling."""
+
+    def __init__(self, label, fn, args, kwargs=None, text=None):
+        self.label = label
+        self.fn = fn
+        self.args = tuple(args)
+        self.kwargs = dict(kwargs or {})
+        self._text = text
+        self._compiled = None
+        self._jaxpr = None
+        self._context = contextlib.nullcontext
+
+    def compiled(self):
+        if self._compiled is None:
+            with self._context():
+                self._compiled = self.fn.lower(*self.args,
+                                               **self.kwargs).compile()
+        return self._compiled
+
+    def compiled_text(self) -> str:
+        if self._text is None:
+            self._text = self.compiled().as_text()
+        return self._text
+
+    def kept_var_idx(self, total: int) -> set:
+        """Flat-arg indices the executable kept as parameters (jit prunes
+        unused args, shifting parameter numbering). Falls back to
+        all-kept for injected-text programs or if jax's internal moves."""
+        if self.fn is None:
+            return set(range(total))
+        ex = getattr(self.compiled(), "_executable", None)
+        kept = getattr(ex, "_kept_var_idx", None)
+        return set(range(total)) if kept is None else set(kept)
+
+    def jaxpr(self):
+        if self._jaxpr is None:
+            import jax
+
+            with self._context():
+                self._jaxpr = jax.make_jaxpr(self.fn)(*self.args,
+                                                      **self.kwargs)
+        return self._jaxpr
+
+
+@dataclasses.dataclass
+class HotPath:
+    """A named family of programs sharing one budget and one context."""
+
+    name: str                       # "lm.decode", "cnn.fwd[mini,<4:4>]"
+    workload: str                   # "lm" | "cnn" | "gateway"
+    budget: Budget
+    programs: list
+    context: object = None          # zero-arg callable -> context manager
+
+    def __post_init__(self):
+        ctx = self.context or contextlib.nullcontext
+        for p in self.programs:
+            p._context = ctx
+
+    def lint(self, rules=None) -> list[Violation]:
+        from repro.analysis import rules as _rules
+
+        return _rules.run_rules(self, names=rules)
+
+
+# -- process-wide registration ----------------------------------------------
+#
+# Engines register at construction and unregister in close(); weakrefs so
+# a dropped engine never pins its packed tree (or blocks GC) just because
+# nobody linted it.
+
+_PROVIDERS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def register(provider) -> None:
+    """Register an object exposing ``hot_paths() -> list[HotPath]``."""
+    _PROVIDERS.add(provider)
+
+
+def unregister(provider) -> None:
+    _PROVIDERS.discard(provider)
+
+
+def registered() -> list:
+    return list(_PROVIDERS)
+
+
+def iter_hot_paths(workload=None):
+    for prov in list(_PROVIDERS):
+        for hp in prov.hot_paths():
+            if workload is None or hp.workload == workload:
+                yield hp
+
+
+def lint_hot_paths(hot_paths, rules=None) -> list[Violation]:
+    """Run the rule registry over hot paths; returns all violations."""
+    out = []
+    for hp in hot_paths:
+        out += hp.lint(rules=rules)
+    return out
+
+
+def lint_registered(workload=None, rules=None) -> list[Violation]:
+    return lint_hot_paths(iter_hot_paths(workload), rules=rules)
+
+
+def format_report(violations) -> str:
+    if not violations:
+        return "OK: no hot-path invariant violations"
+    lines = [f"{len(violations)} hot-path invariant violation(s):"]
+    lines += [f"  {v}" for v in violations]
+    return "\n".join(lines)

@@ -1,0 +1,266 @@
+"""The hot-path rule registry.
+
+Each rule is a function ``rule(hot_path) -> iterable[Violation]`` under a
+stable registry name; :func:`run_rules` drives every registered rule over
+one :class:`~repro.analysis.hotpath.HotPath` and collects violations with
+``"<hotpath>:<program>"`` attribution. The six core rules encode the
+invariants the serving performance story rests on (DESIGN.md §10):
+
+collective-budget   textual all-gather/all-reduce/all-to-all/permute
+                    counts within the declared budget, all-gather results
+                    under the byte bound, counts flat across the pow2
+                    drain/scan family (generalizes the PR 3/4 in-test HLO
+                    assertions).
+donation-honored    every declared donate argnum's leaves actually alias
+                    in the compiled executable — no silent copy fallback.
+dtype-discipline    no f64 anywhere, no f32 dot/conv inside declared-bf16
+                    programs, packed uint32 planes never converted to
+                    float.
+no-host-sync        no callback/infeed/outfeed/host-transfer primitive in
+                    a hot program (they serialize the dispatch queue).
+recompile-hazard    no non-weakly-typed host scalars in example call args
+                    (a np.float32 temperature fragments the pow2 bucket
+                    compile bound that python-float args share).
+tile-legality       autotuner TuneDecisions carried by packed weights are
+                    legal as requested: pallas only where GSPMD permits
+                    it, tile requests dividing the deployment shapes so
+                    ``kernels.ops.matmul_tiles`` never silently rewrites
+                    a decision the cache claims was measured.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis import hlo
+from repro.analysis.hotpath import Violation
+
+RULES: dict = {}
+
+
+def rule(name: str):
+    def deco(fn):
+        RULES[name] = fn
+        return fn
+    return deco
+
+
+def run_rules(hp, names=None):
+    if names is not None:
+        unknown = set(names) - set(RULES)
+        if unknown:
+            raise KeyError(f"unknown rules {sorted(unknown)}; "
+                           f"registered: {sorted(RULES)}")
+    out = []
+    for name, fn in RULES.items():
+        if names is not None and name not in names:
+            continue
+        out += list(fn(hp))
+    return out
+
+
+def _tag(hp, prog) -> str:
+    return f"{hp.name}:{prog.label}"
+
+
+# -- collective-budget -------------------------------------------------------
+
+@rule("collective-budget")
+def collective_budget(hp):
+    caps = dict(hp.budget.collectives)
+    bound = hp.budget.max_gather_bytes
+    counts = {}
+    for prog in hp.programs:
+        txt = prog.compiled_text()
+        c = hlo.collective_counts(txt)
+        counts[prog.label] = c
+        for kind, cap in caps.items():
+            if cap is not None and c.get(kind, 0) > cap:
+                yield Violation(_tag(hp, prog), "collective-budget",
+                                f"{c[kind]} x {kind} exceeds budget {cap}")
+        if bound is not None:
+            big = [s for s in hlo.gather_sizes(txt) if s > bound]
+            if big:
+                yield Violation(
+                    _tag(hp, prog), "collective-budget",
+                    f"all-gather result(s) over {bound} bytes: "
+                    f"{sorted(big)[-3:]} — weight/KV-sized resharding in "
+                    f"a steady-state program")
+    if hp.budget.scan_flat and len(counts) > 1:
+        first_label = hp.programs[0].label
+        first = counts[first_label]
+        for label, c in counts.items():
+            if c != first:
+                yield Violation(
+                    f"{hp.name}:*", "collective-budget",
+                    f"collective counts not flat across the family: "
+                    f"{first_label}={first} vs {label}={c} — a collective "
+                    f"moved inside the scan body")
+                break
+
+
+# -- donation-honored --------------------------------------------------------
+
+@rule("donation-honored")
+def donation_honored(hp):
+    if not hp.budget.donate:
+        return
+    import jax
+
+    for prog in hp.programs:
+        txt = prog.compiled_text()
+        aliased = hlo.input_output_aliases(txt)
+        ranges, total = [], 0
+        for a in prog.args:
+            n = len(jax.tree_util.tree_leaves(a))
+            ranges.append((total, total + n))
+            total += n
+        total += len(jax.tree_util.tree_leaves(prog.kwargs))
+        # jit prunes unused args from the executable; map each flat arg
+        # leaf to its surviving parameter number before checking aliases.
+        kept = sorted(prog.kept_var_idx(total))
+        param_of = {leaf: i for i, leaf in enumerate(kept)}
+        n_params = hlo.entry_param_count(txt)
+        if n_params is not None and n_params != len(kept):
+            yield Violation(
+                _tag(hp, prog), "donation-honored",
+                f"cannot map donate argnums: executable has {n_params} "
+                f"params for {len(kept)} kept arg leaves")
+            continue
+        for argnum in hp.budget.donate:
+            lo, hi = ranges[argnum]
+            pruned = [i for i in range(lo, hi) if i not in param_of]
+            missing = [param_of[i] for i in range(lo, hi)
+                       if i in param_of and param_of[i] not in aliased]
+            if pruned:
+                yield Violation(
+                    _tag(hp, prog), "donation-honored",
+                    f"donated argnum {argnum}: {len(pruned)} buffer(s) "
+                    f"unused by the program (pruned from the executable) "
+                    f"— dead donation")
+            if missing:
+                yield Violation(
+                    _tag(hp, prog), "donation-honored",
+                    f"donated argnum {argnum}: {len(missing)}/{hi - lo} "
+                    f"buffer(s) not aliased in the executable (params "
+                    f"{missing[:4]}{'...' if len(missing) > 4 else ''}) — "
+                    f"silent copy fallback")
+
+
+# -- dtype-discipline --------------------------------------------------------
+
+@rule("dtype-discipline")
+def dtype_discipline(hp):
+    for prog in hp.programs:
+        txt = prog.compiled_text()
+        if not hp.budget.allow_f64 and hlo.has_f64(txt):
+            yield Violation(_tag(hp, prog), "dtype-discipline",
+                            "f64 buffer in compiled program")
+        if prog.fn is None:   # injected-text program: no jaxpr to walk
+            continue
+        if hp.budget.compute_dtype == "bf16":
+            ups = hlo.f32_matmul_eqns(prog.jaxpr())
+            if ups:
+                yield Violation(
+                    _tag(hp, prog), "dtype-discipline",
+                    f"{len(ups)} f32 {'/'.join(sorted(set(ups)))} op(s) "
+                    f"inside a declared-bf16 program")
+        for site in hlo.plane_float_converts(prog.jaxpr()):
+            yield Violation(
+                _tag(hp, prog), "dtype-discipline",
+                f"packed uint32 plane touched by float op: {site}")
+
+
+# -- no-host-sync ------------------------------------------------------------
+
+@rule("no-host-sync")
+def no_host_sync(hp):
+    if hp.budget.allow_host_sync:
+        return
+    for prog in hp.programs:
+        prims = [] if prog.fn is None \
+            else hlo.callback_primitives(prog.jaxpr())
+        for p in prims:
+            yield Violation(_tag(hp, prog), "no-host-sync",
+                            f"host-sync primitive in trace: {p}")
+        if not prims:   # compiled-side net for callbacks jaxprs can hide
+            for site in hlo.host_callback_sites(prog.compiled_text()):
+                yield Violation(_tag(hp, prog), "no-host-sync",
+                                f"host round-trip in executable: {site}")
+
+
+# -- recompile-hazard --------------------------------------------------------
+
+@rule("recompile-hazard")
+def recompile_hazard(hp):
+    if not hp.budget.check_weak_scalars:
+        return
+    for prog in hp.programs:
+        for i, a in enumerate(prog.args):
+            if isinstance(a, (bool, int, float)) or a is None:
+                continue   # python scalars are weakly typed: shared program
+            if isinstance(a, np.generic) or \
+                    (isinstance(a, np.ndarray) and a.ndim == 0):
+                yield Violation(
+                    _tag(hp, prog), "recompile-hazard",
+                    f"arg {i} is a committed numpy scalar "
+                    f"({np.dtype(a.dtype).name}); a python scalar would "
+                    f"stay weakly typed and share the compiled program")
+                continue
+            aval = getattr(a, "aval", None)
+            if aval is not None and getattr(aval, "ndim", 1) == 0 \
+                    and not getattr(aval, "weak_type", True):
+                yield Violation(
+                    _tag(hp, prog), "recompile-hazard",
+                    f"arg {i} is a 0-d non-weakly-typed device scalar "
+                    f"({aval.str_short()}); each distinct dtype forks the "
+                    f"compile cache")
+
+
+# -- tile-legality -----------------------------------------------------------
+
+def _packed_leaves(args):
+    import jax
+
+    from repro.core.packed import PackedConvWeight, PackedWeight
+
+    def is_packed(x):
+        return isinstance(x, (PackedWeight, PackedConvWeight))
+
+    for a in args:
+        for leaf in jax.tree_util.tree_leaves(a, is_leaf=is_packed):
+            if is_packed(leaf):
+                yield leaf
+
+
+@rule("tile-legality")
+def tile_legality(hp):
+    from repro.core.packed import PackedConvWeight
+
+    for prog in hp.programs:
+        for pw in _packed_leaves(prog.args):
+            tune = getattr(pw, "tune", None)
+            if tune is None:
+                continue
+            if tune.backend == "pallas" and not hp.budget.pallas_ok:
+                yield Violation(
+                    _tag(hp, prog), "tile-legality",
+                    "TuneDecision selects 'pallas' under a sharding mesh "
+                    "(no GSPMD rule: the planes would all-gather every "
+                    "step)")
+            mat = pw.mat if isinstance(pw, PackedConvWeight) else pw
+            n = int(mat.codes.shape[1])
+            kw = int(mat.planes.shape[-1])
+            m = None if isinstance(pw, PackedConvWeight) \
+                else hp.budget.m_hint
+            for dim_name, dim, req in (("m", m, tune.bm),
+                                       ("n", n, tune.bn),
+                                       ("kw", kw, tune.bkw)):
+                if req is None or dim is None:
+                    continue
+                if dim % req:
+                    yield Violation(
+                        _tag(hp, prog), "tile-legality",
+                        f"tile request b{dim_name}={req} does not divide "
+                        f"{dim_name}={dim}; matmul_tiles would silently "
+                        f"legalize it — the cached decision no longer "
+                        f"describes the executed kernel")

@@ -1,0 +1,150 @@
+"""Thread-ownership lint for the asyncio gateway.
+
+serving/gateway.py splits work across two thread domains (its module
+docstring states the ownership rule): the **asyncio event loop** owns the
+bounded queues, handles and telemetry; the **worker threads** own the
+engines — every engine-state mutation (submit/step/cancel/redeploy/...)
+must happen on a worker, reached only through the queue. This checker
+enforces that statically: it walks the gateway's AST, builds the
+``self.method()`` call graph, computes which methods are reachable from
+the event-loop entry points, and flags any engine mutation — a call to a
+non-read-only engine method, or an attribute store on an engine — inside
+that reachable set.
+
+The thread boundary itself is modelled precisely: passing a bound method
+as a *value* (``Thread(target=self._lm_worker)``, ``self._guard(fn)``)
+creates no call edge, and function bodies nested inside a method (the
+worker closures ``_guard`` builds) are excluded from their enclosing
+method's scan — deferred execution happens on whichever thread runs the
+closure, not the caller's.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.hotpath import Violation
+
+# Event-loop-side entry points of the Gateway class: public API awaited /
+# called from asyncio, plus the loop-side callbacks they use. __init__ is
+# excluded — it runs before any worker thread exists.
+LOOP_ROOTS = ("submit_lm", "submit_vision", "start", "stop", "drain",
+              "stats", "__aenter__", "__aexit__")
+
+# Engine members the event loop may *call*: read-only validation/telemetry
+# with no engine-state writes. Everything else (submit, step, cancel,
+# redeploy, degrade_cohort, run, snapshot, restore, close, ...) mutates.
+ENGINE_READONLY_CALLS = ("validate", "n_free_slots")
+
+ENGINE_ATTRS = ("_lm", "_vision")
+
+
+def _self_attr(node):
+    """'name' for a ``self.name`` expression, else None."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _engine_of(node):
+    """'_lm' for a ``self._lm`` / ``self._lm.<x>`` chain root, else None."""
+    n = node
+    while isinstance(n, ast.Attribute):
+        root = _self_attr(n)
+        if root in ENGINE_ATTRS:
+            return root
+        n = n.value
+    return None
+
+
+def _iter_body(node):
+    """Statements of a method body, skipping nested function/lambda bodies
+    (they execute on whichever thread calls them, not here)."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        yield child
+        yield from _iter_body(child)
+
+
+def check_source(source: str, class_name: str = "Gateway",
+                 loop_roots=LOOP_ROOTS,
+                 engine_attrs=ENGINE_ATTRS,
+                 readonly_calls=ENGINE_READONLY_CALLS,
+                 filename: str = "gateway.py"):
+    """Lint one module's source; returns a list of Violations."""
+    tree = ast.parse(source)
+    cls = next((n for n in ast.walk(tree)
+                if isinstance(n, ast.ClassDef) and n.name == class_name),
+               None)
+    if cls is None:
+        return [Violation(f"{filename}", "thread-ownership",
+                          f"class {class_name} not found")]
+
+    methods = {n.name: n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+    # Direct self.method() call edges, nested closures excluded
+    # (_iter_body yields every descendant node outside nested functions).
+    edges: dict = {}
+    for name, node in methods.items():
+        edges[name] = set()
+        for sub in _iter_body(node):
+            if isinstance(sub, ast.Call):
+                callee = _self_attr(sub.func)
+                if callee in methods:
+                    edges[name].add(callee)
+
+    # Reachability from the event-loop roots.
+    reachable, frontier = set(), [r for r in loop_roots if r in methods]
+    while frontier:
+        m = frontier.pop()
+        if m in reachable:
+            continue
+        reachable.add(m)
+        frontier += list(edges.get(m, ()))
+
+    out = []
+    for name in sorted(reachable):
+        node = methods[name]
+        for sub in _iter_body(node):
+            # engine method calls
+            if isinstance(sub, ast.Call):
+                func = sub.func
+                if isinstance(func, ast.Attribute) and \
+                        _engine_of(func.value) in engine_attrs:
+                    if func.attr not in readonly_calls:
+                        out.append(Violation(
+                            f"{filename}:{class_name}.{name}",
+                            "thread-ownership",
+                            f"line {sub.lineno}: engine call "
+                            f".{func.attr}() reachable from the asyncio "
+                            f"thread; engine mutations must go through "
+                            f"the worker queue"))
+            # engine attribute stores (incl. augmented assignment)
+            targets = []
+            if isinstance(sub, ast.Assign):
+                targets = sub.targets
+            elif isinstance(sub, (ast.AugAssign, ast.AnnAssign)):
+                targets = [sub.target]
+            for t in targets:
+                if isinstance(t, ast.Attribute) and \
+                        _engine_of(t.value) in engine_attrs:
+                    out.append(Violation(
+                        f"{filename}:{class_name}.{name}",
+                        "thread-ownership",
+                        f"line {sub.lineno}: engine attribute store "
+                        f".{t.attr} = ... reachable from the asyncio "
+                        f"thread"))
+    return out
+
+
+def check_gateway():
+    """Lint the shipped serving/gateway.py module."""
+    import inspect
+
+    from repro.serving import gateway as gw
+
+    return check_source(inspect.getsource(gw),
+                        filename=gw.__file__.rsplit("/", 1)[-1])

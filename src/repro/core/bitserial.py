@@ -32,7 +32,6 @@ at prepack time (the paper's "program subarrays once"); see DESIGN.md §3.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

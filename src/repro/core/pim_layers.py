@@ -25,7 +25,6 @@ shape-dispatch heuristic (:func:`fuse_conv_heuristic`) or forced via
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

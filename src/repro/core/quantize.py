@@ -21,7 +21,6 @@ where ``P = sum_k qa_k qw_k`` is the integer matmul computed bit-serially
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

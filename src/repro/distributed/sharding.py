@@ -21,7 +21,6 @@ from __future__ import annotations
 import logging
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _log = logging.getLogger(__name__)

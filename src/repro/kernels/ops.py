@@ -13,7 +13,6 @@ from the historical three (pack A, pack W, matmul).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -38,7 +38,6 @@ from repro.launch.mesh import make_production_mesh
 from repro.models.lm import (
     abstract_params, decode_step, init_state, param_count, prefill,
 )
-from repro.models.lm.model import cast_params
 from repro.roofline import analysis as roofline
 from repro.training.optimizer import OptimizerConfig, init_opt_state
 from repro.training.train_loop import make_train_step

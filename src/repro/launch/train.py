@@ -12,10 +12,7 @@ Example (CPU, ~100M-param reduced llama):
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp

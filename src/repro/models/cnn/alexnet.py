@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from . import layers as L
 from .specs import affine_spec, conv_spec, fc_spec, pool_spec

@@ -25,8 +25,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.pim_layers import pim_linear
-
 from .config import ModelConfig
 
 _ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}

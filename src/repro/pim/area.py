@@ -12,7 +12,6 @@ bites) drives the Fig. 13a per-area trends.
 """
 from __future__ import annotations
 
-import math
 
 from .hierarchy import Geometry
 

@@ -604,6 +604,21 @@ class TuningCache:
         except OSError as e:
             self._warn(f"unwritable ({e!r})")
 
+    def reset(self):
+        """Drop the in-memory state and re-read the backing file.
+
+        The single-warning fallback memo (``_warned``) sticks for the life
+        of the instance: once a corrupt file degraded the cache, later
+        ``get``s silently serve the empty memo even after the file on disk
+        is repaired. Engine teardown (``ServeEngine.close`` /
+        ``VisionEngine.close``) calls this so a second deploy sharing the
+        cache object actually reloads the repaired file instead of
+        re-tuning from scratch behind a stale warning flag."""
+        self.entries = {}
+        self._warned = False
+        if self.path:
+            self._load()
+
     # -- decisions ----------------------------------------------------------
 
     def get(self, key: str):

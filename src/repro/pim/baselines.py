@@ -27,7 +27,6 @@ import functools
 import math
 import statistics
 
-from .calibrate import PAPER_CLAIMS
 from .hierarchy import Geometry
 from .simulator import simulate_model
 

@@ -21,7 +21,6 @@ where n is the size of the replica group the op runs over (parsed from
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 
 from . import hw

@@ -193,6 +193,12 @@ class ServeEngine:
 
         self._build_programs()
 
+        # Lint-gate registration (repro.analysis; DESIGN.md §10): the
+        # engine's jitted program families become lintable hot paths for
+        # the CLI/CI gate. Weakly held — close() or GC unregisters.
+        from repro import analysis as _analysis
+        _analysis.register(self)
+
     def _maybe_autotune(self):
         """Attach per-weight TuneDecisions to the prepacked tree.
 
@@ -385,6 +391,60 @@ class ServeEngine:
             self._decode[n] = fn
         return fn
 
+    def hot_paths(self):
+        """Declare the three hot-loop program families for the lint gate.
+
+        Budgets encode the serving performance story (DESIGN.md §5/§10):
+        decode must stay free of all-to-all and weight/KV-sized gathers
+        with collective counts flat in the drain length, every donated
+        state/ctrl buffer must actually alias, and no host sync, f64 or
+        illegal autotune tile may appear in any hot program. Programs
+        lower under :meth:`_activate`, exactly like the real dispatch."""
+        from repro import analysis as _an
+
+        base = dict(
+            collectives=(("all-to-all", 0),),
+            compute_dtype="bf16" if str(self.cfg.dtype) == "bfloat16"
+            else None,
+            m_hint=self.max_batch,
+            pallas_ok=self.mesh is None,
+        )
+        tokens = jnp.zeros((1, 1), jnp.int32)
+        logits = jnp.zeros((1, 1, self.cfg.vocab),
+                           jnp.dtype(self.cfg.dtype))
+        return [
+            _an.HotPath(
+                "lm.prefill", "lm",
+                _an.Budget(donate=(1,), max_gather_bytes=None, **base),
+                [_an.Program("chunk=1", self._prefill,
+                             (self.params, self.state, tokens, 0, 0))],
+                context=self._activate),
+            _an.HotPath(
+                "lm.admit", "lm",
+                _an.Budget(donate=(0,), max_gather_bytes=None, **base),
+                [_an.Program("slot", self._admit_ctrl,
+                             (self.ctrl, logits, 0, -1, 4))],
+                context=self._activate),
+            _an.HotPath(
+                "lm.decode", "lm",
+                _an.Budget(donate=(1, 2), max_gather_bytes=16384,
+                           scan_flat=True, **base),
+                [_an.Program(f"n={n}", self._decode_fn(n),
+                             (self.params, self.state, self.ctrl))
+                 for n in sorted({1, self.drain_steps})],
+                context=self._activate),
+        ]
+
+    def close(self):
+        """Engine teardown: deregister from the lint gate and reset the
+        tuning cache so a later deploy sharing the cache object re-reads
+        its (possibly repaired) backing file instead of serving this
+        deployment's stale fallback memo."""
+        from repro import analysis as _analysis
+        _analysis.unregister(self)
+        if self.tune_cache is not None:
+            self.tune_cache.reset()
+
     # -- public API ---------------------------------------------------------
 
     def validate(self, prompt, max_new_tokens: int):
@@ -405,7 +465,7 @@ class ServeEngine:
             raise ValueError(
                 f"prompt ({n} tokens) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds the decode grid (max_len={self.max_len}); the "
-                f"overflow would clamp into the grid's last row")
+                "overflow would clamp into the grid's last row")
 
     def submit(self, req: Request):
         self.validate(req.prompt, req.max_new_tokens)

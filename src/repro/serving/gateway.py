@@ -47,6 +47,21 @@ Numerics: the gateway adds zero. Admission order only picks *which* slot a
 request lands in, and slots are isolated (tested since PR 2/3), so an
 admitted request's token stream is bit-identical to the same request on an
 unloaded engine — asserted under 2× overload in benchmarks/serve_bench.py.
+
+Thread-ownership rule (machine-checked by ``repro.analysis.threads``, see
+tests/test_analysis.py): the engines referenced by ``self._lm`` /
+``self._vision`` are **owned by their worker threads**. Code reachable from
+the event-loop entry points (``submit_lm``/``submit_vision``/``start``/
+``stop``/``drain``/``stats``/``__aenter__``/``__aexit__``) must not call
+engine methods or assign engine attributes — the only loop-side engine
+access allowed is the read-only ``validate``/``n_free_slots`` pair used at
+admission. Everything else (submit/step/cancel/redeploy/drain_steps
+mutation, the degradation-tier actions) happens on the worker, which is
+also the only side that touches jax. Handing the engine *object* around
+(thread targets, ``_guard`` wrappers) is fine; calling into it from the
+loop is not. The AST lint walks ``self.<method>()`` call edges from the
+loop roots and flags any engine call or store outside the allowlist, so a
+refactor that accidentally moves engine work onto the loop fails CI.
 """
 from __future__ import annotations
 

@@ -178,6 +178,12 @@ class VisionEngine:
         self._fault_key = jax.random.PRNGKey(seed)
         self.health = {"dispatches": 0, "rollbacks": 0, "repairs": 0,
                        "repaired_cols": 0, "degraded": []}
+        # Lint-gate registration (repro.analysis; DESIGN.md §10). Image
+        # shapes are only known at dispatch, so _dispatch records each
+        # (model, precision, bucket) -> image shape for hot_paths().
+        self._hot_shapes: dict = {}
+        from repro import analysis as _analysis
+        _analysis.register(self)
 
     # -- mesh scoping (same contract as ServeEngine._activate) --------------
 
@@ -366,6 +372,76 @@ class VisionEngine:
         with read_disturb_scope(faults, key):
             return apply_fn(params, batch, cfg=cfg)
 
+    def _act_gather_bound(self, params, bucket: int, h: int, w: int) -> int:
+        """Largest legal all-gather in a quantized bucket forward: one
+        activation map at the widest conv channel count (the paper's
+        transfer phase redistributes activations between bank-split convs;
+        nothing patch-matrix- or weight-sized may cross shards)."""
+        from repro.core.packed import PackedConvWeight
+
+        cmax = 1
+        for leaf in jax.tree_util.tree_leaves(
+                params, is_leaf=lambda x: isinstance(x, PackedConvWeight)):
+            if isinstance(leaf, PackedConvWeight):
+                _, _, c, o = leaf.kernel_shape
+                cmax = max(cmax, int(c), int(o))
+        return 4 * bucket * h * w * cmax
+
+    def hot_paths(self, shapes=None):
+        """Declare every dispatched bucket forward for the lint gate.
+
+        ``shapes`` optionally supplies/overrides image shapes as
+        ``{(model, precision, bucket): (h, w, c)}`` for callers that lint
+        before any dispatch. Quantized mesh forwards budget their gathers
+        at one widest-channel activation map; float forwards are fully
+        replicated (zero gathers). The donated image batch is a
+        free-the-buffer donation (it cannot alias the smaller logits), so
+        no aliasing is demanded of it."""
+        from functools import partial as _partial
+
+        from repro import analysis as _an
+
+        merged = dict(self._hot_shapes)
+        merged.update(shapes or {})
+        out = []
+        for (model, precision, bucket), (h, w, c) in sorted(
+                merged.items(), key=str):
+            quantized = parse_precision(precision) is not None
+            params = self._packed_params(model, precision)
+            tuned = quantized and self.autotune != "off"
+            if tuned:
+                params = self._tuned_params(model, precision,
+                                            (bucket, h, w, c))
+            fn = self._fwd_fn(model, precision, bucket,
+                              params if tuned else None)
+            args = (params, jax.ShapeDtypeStruct((bucket, h, w, c),
+                                                 jnp.float32))
+            if quantized and self._transient:
+                args = args + (jax.random.PRNGKey(0),)
+            if self.mesh is None:
+                gather_cap = None
+            elif quantized:
+                gather_cap = self._act_gather_bound(params, bucket, h, w)
+            else:
+                gather_cap = 0   # float path: fully replicated
+            budget = _an.Budget(collectives=(("all-to-all", 0),),
+                                max_gather_bytes=gather_cap,
+                                m_hint=bucket,
+                                pallas_ok=self.mesh is None)
+            out.append(_an.HotPath(
+                f"cnn.fwd[{model},{precision or 'float'},b={bucket}]",
+                "cnn", budget, [_an.Program("fwd", fn, args)],
+                context=_partial(self._activate, quantized)))
+        return out
+
+    def close(self):
+        """Engine teardown: deregister from the lint gate and reset the
+        tuning cache (see ServeEngine.close)."""
+        from repro import analysis as _analysis
+        _analysis.unregister(self)
+        if self.tune_cache is not None:
+            self.tune_cache.reset()
+
     # -- public API ----------------------------------------------------------
 
     def submit(self, req: VisionRequest):
@@ -457,6 +533,7 @@ class VisionEngine:
         bucket = len(group)
         batch = jnp.asarray(
             np.stack([np.asarray(r.image, np.float32) for r in group]))
+        self._hot_shapes[(model, precision, bucket)] = tuple(batch.shape[1:])
         params = self._packed_params(model, precision)
         quantized = parse_precision(precision) is not None
         if quantized and self.autotune != "off":
@@ -505,7 +582,7 @@ class VisionEngine:
                 dt = time.monotonic() - t0
                 if wd.deadline_s is not None and dt > wd.deadline_s:
                     raise RuntimeError(
-                        f"vision dispatch exceeded deadline "
+                        "vision dispatch exceeded deadline "
                         f"({dt:.3f}s > {wd.deadline_s:.3f}s)")
                 if any(not np.isfinite(c.logits).all() for c in out):
                     raise RuntimeError("non-finite logits in vision dispatch")

@@ -10,7 +10,6 @@ set ``keep_master=False`` for pure-f32 training to drop the third copy.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

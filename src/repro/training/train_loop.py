@@ -12,7 +12,6 @@ Cross-pod gradient compression (int8 + error feedback) lives in
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

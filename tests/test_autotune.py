@@ -147,6 +147,49 @@ def test_cache_checkpoint_round_trip(tmp_path):
     assert fresh.get(at.gemm_key(4, 64, 128, 4, 4, at.XLA_BACKENDS)) == d
 
 
+def test_reset_reloads_repaired_file_and_rearms_warning(tmp_path):
+    """The single-warning fallback memo used to stick for the instance
+    lifetime: a cache that degraded on a corrupt file kept serving the
+    empty memo — silently — even after the file on disk was repaired.
+    ``reset()`` drops the memo and re-reads the backing file."""
+    path = str(tmp_path / "tune.json")
+    good = at.TuningCache(path)
+    d = at.decide_gemm(4, 64, 128, 4, 4, cache=good, hlo_tiebreak=False)
+    key = at.gemm_key(4, 64, 128, 4, 4, at.XLA_BACKENDS)
+    blob = open(path).read()
+
+    open(path, "w").write("{ corrupt")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        cache = at.TuningCache(path)
+    assert cache.get(key) is None and cache._warned
+
+    open(path, "w").write(blob)        # repair on disk
+    assert cache.get(key) is None      # stale memo: still empty, still silent
+    cache.reset()
+    assert cache.get(key) == d         # repaired file actually reloaded
+    assert not cache._warned           # and the fallback warning is re-armed
+
+
+def test_engine_close_resets_shared_cache(tmp_path):
+    """Engine teardown resets its tuning cache, so a second deploy sharing
+    the cache object reloads the (self-healed) backing file instead of
+    serving the stale degraded memo."""
+    from repro.serving import ServeEngine
+
+    path = str(tmp_path / "tune.json")
+    open(path, "w").write("{ corrupt")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        cache = at.TuningCache(path)
+    cfg, params = _lm_setup()
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                      autotune="cost", tuning_cache=cache)
+    assert eng.tune_cache is cache
+    assert len(cache) > 0              # tuning self-healed the file on save
+    eng.close()
+    assert not cache._warned           # close() re-armed the fallback path
+    assert len(cache) > 0              # reload picked up the healed file
+
+
 def test_stale_snapshot_extra_dropped_with_warning():
     cache = at.TuningCache(None)
     with pytest.warns(RuntimeWarning, match="falling back"):

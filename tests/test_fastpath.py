@@ -25,7 +25,6 @@ from repro.core import (
     pim_linear,
     prepack_conv2d,
     prepack_linear,
-    quantized_matmul,
 )
 from repro.core.bitserial import int_matmul_direct, int_matmul_prepacked
 

@@ -236,14 +236,17 @@ def test_decode_hlo_identical_with_persistent_faults():
                       d_ff=128, vocab=61, remat="none", dtype="float32")
     params = init(cfg, jax.random.PRNGKey(0))
 
-    def hlo(faults):
+    from repro.analysis import hlo as H
+
+    def fingerprint(faults):
         eng = ServeEngine(cfg, params, max_batch=4, max_len=32,
                           sampler=SamplerConfig(temperature=0.0),
                           faults=faults)
-        return (eng._decode_fn(4)
-                .lower(eng.params, eng.state, eng.ctrl).as_text())
+        return H.lowered_text(eng._decode_fn(4),
+                              eng.params, eng.state, eng.ctrl)
 
-    assert hlo(None) == hlo(FaultConfig(write_ber=1e-2, seed=1))
+    assert fingerprint(None) == fingerprint(FaultConfig(write_ber=1e-2,
+                                                        seed=1))
 
 
 # -- self-healing LM engine ---------------------------------------------------
@@ -291,7 +294,6 @@ def test_engine_rollback_retry_token_parity():
 def test_engine_degrades_to_float_under_sustained_faults():
     """Once the failure budget is spent the engine drops to the float
     fallback path and keeps serving instead of crashing."""
-    import dataclasses
 
     from repro.models.lm import ModelConfig, init
     from repro.serving import SamplerConfig, ServeEngine

@@ -1,0 +1,111 @@
+"""Pin the roofline HLO cost model (repro.roofline.hlo_cost) on hand-written
+fixtures with known arithmetic: dot flops, conv flops, collective byte/count
+accounting, and the while-loop trip-count multiplication that is the whole
+point of the module (``cost_analysis()`` visits scan bodies once).
+
+The fixtures follow post-optimization HLO text syntax — the same format the
+parser sees from ``compiled.as_text()``; tests elsewhere exercise it on real
+dumps, here the expected numbers are computable by hand.
+"""
+from repro.roofline.hlo_cost import analyze
+
+_MATMUL = """\
+HloModule m
+
+ENTRY %main (p0: f32[8,64], p1: f32[64,32]) -> f32[8,32] {
+  %p0 = f32[8,64] parameter(0)
+  %p1 = f32[64,32] parameter(1)
+  ROOT %dot.1 = f32[8,32] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_matmul_flops_and_bytes_pinned():
+    c = analyze(_MATMUL)
+    # 2 * M*N * K
+    assert c.flops == 2 * (8 * 32) * 64
+    # parameters are free; the dot reads both operands and writes its result
+    assert c.bytes == 4 * (8 * 32 + 8 * 64 + 64 * 32)
+    assert c.wire_bytes == 0
+    assert c.unknown_loops == 0
+
+
+_CONV = """\
+HloModule m
+
+ENTRY %main (p0: f32[1,16,16,8], p1: f32[3,3,8,16]) -> f32[1,16,16,16] {
+  %p0 = f32[1,16,16,8] parameter(0)
+  %p1 = f32[3,3,8,16] parameter(1)
+  ROOT %conv.1 = f32[1,16,16,16] convolution(%p0, %p1), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+}
+"""
+
+
+def test_conv_flops_pinned():
+    c = analyze(_CONV)
+    # 2 * out_elems * (kernel elems per output) = 2 * (16*16*16) * (3*3*8)
+    assert c.flops == 2 * (16 * 16 * 16) * (3 * 3 * 8)
+    assert c.bytes == 4 * (16 * 16 * 16 + 16 * 16 * 8 + 3 * 3 * 8 * 16)
+
+
+_PSUM = """\
+HloModule m
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  ROOT %ar.1 = f32[1024] all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+
+
+def test_psum_bytes_counts_and_ring_wire_pinned():
+    c = analyze(_PSUM)
+    buf = 1024 * 4
+    assert c.flops == 0
+    assert c.coll_counts["all-reduce"] == 1
+    assert c.coll_bytes["all-reduce"] == buf
+    # hbm: read + write the buffer; wire: bidirectional ring factor
+    assert c.bytes == 2 * buf
+    assert c.wire_bytes == 2 * buf * (4 - 1) / 4
+
+
+_SCAN = """\
+HloModule m
+
+%body (p: f32[128]) -> f32[128] {
+  %p = f32[128] parameter(0)
+  %ar.2 = f32[128] all-reduce(%p), replica_groups={{0,1}}, to_apply=%add
+  ROOT %add.1 = f32[128] add(%ar.2, %p)
+}
+
+%cond (p: f32[128]) -> pred[] {
+  %p = f32[128] parameter(0)
+  ROOT %lt.1 = pred[] compare(%p, %p), direction=LT
+}
+
+ENTRY %main (p0: f32[128]) -> f32[128] {
+  %p0 = f32[128] parameter(0)
+  ROOT %w.1 = f32[128] while(%p0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"16"}}
+}
+"""
+
+
+def test_while_loop_multiplies_by_trip_count():
+    c = analyze(_SCAN)
+    buf = 128 * 4
+    # body: one add (128 flops) per trip; cond: one compare (1 flop)
+    assert c.flops == 16 * (128 + 1)
+    # the in-loop collective is counted per trip, not once
+    assert c.coll_counts["all-reduce"] == 16
+    assert c.coll_bytes["all-reduce"] == 16 * buf
+    assert c.wire_bytes == 16 * 2 * buf * (2 - 1) / 2
+    assert c.unknown_loops == 0
+
+
+def test_unannotated_while_counts_once_and_reports():
+    txt = _SCAN.replace(
+        ', backend_config={"known_trip_count":{"n":"16"}}', "")
+    c = analyze(txt)
+    assert c.unknown_loops == 1
+    assert c.flops == 128 + 1
+    assert c.coll_counts["all-reduce"] == 1

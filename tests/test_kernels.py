@@ -6,7 +6,6 @@ import pytest
 
 from repro.core import bitslice
 from repro.kernels import ops, ref
-from repro.kernels.bitplane_pack import bitplane_pack
 from repro.kernels.bitserial_matmul import bitserial_matmul_packed
 
 

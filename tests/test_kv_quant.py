@@ -3,7 +3,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.models.lm import (
     ModelConfig, decode_step, forward, init, init_state, prefill,

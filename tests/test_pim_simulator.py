@@ -8,10 +8,10 @@ import pytest
 
 from repro.pim.area import add_on_area_mm2, chip_area_mm2
 from repro.pim.baselines import (
-    COUNTERPARTS, MODELS, WI_CONFIGS, energy_table, speedup_table,
+    MODELS, WI_CONFIGS, energy_table, speedup_table,
 )
 from repro.pim.calibrate import (
-    PAPER_CLAIMS, PAPER_ENERGY_FRACTIONS, PAPER_LATENCY_FRACTIONS, calibrated,
+    PAPER_CLAIMS, PAPER_ENERGY_FRACTIONS, PAPER_LATENCY_FRACTIONS,
 )
 from repro.pim.hierarchy import Geometry
 from repro.pim.simulator import peak_gops, simulate_model

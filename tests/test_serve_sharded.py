@@ -10,7 +10,6 @@ the mesh path too.
 """
 import json
 import os
-import re
 import subprocess
 import sys
 
@@ -124,29 +123,12 @@ def test_pallas_backend_rejected_on_mesh(params):
 
 
 # -- steady-state HLO invariant ---------------------------------------------
-
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
-                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
-                "u64": 8}
-
-
-def _gather_sizes(txt):
-    """Byte size of every all-gather result in an HLO text dump."""
-    out = []
-    for m in re.finditer(r"= (\w+)\[([\d,]*)\][^a-zA-Z]*all-gather", txt):
-        n = 1
-        for d in m.group(2).split(","):
-            if d:
-                n *= int(d)
-        out.append(n * _DTYPE_BYTES.get(m.group(1), 4))
-    return out
-
-
-def _collective_counts(txt):
-    return {op: len(re.findall(r"= \S+ " + op.replace("-", "[-]") + r"\(",
-                               txt))
-            for op in ("all-gather", "all-reduce", "all-to-all",
-                       "collective-permute")}
+#
+# The gather-size / collective-count / flatness assertions that used to live
+# here as module-level regex helpers are now the `collective-budget` rule of
+# repro.analysis — this test lints the engine's own HotPath declaration, so
+# the suite and the `python -m repro.analysis lint` CI gate share one
+# implementation.
 
 
 @needs8
@@ -157,28 +139,30 @@ def test_decode_hlo_no_resharding(params, serve_mesh):
     per-step collectives are the TP partial-sum all-reduces and KB-scale
     scatter-index broadcasts. Input and output shardings of the donated
     state/ctrl are identical, so repeated calls never reshard."""
+    from repro import analysis
+
     eng = ServeEngine(CFG, params, max_batch=8, max_len=64,
                       sampler=SamplerConfig(temperature=0.0), mesh=serve_mesh)
-    counts = {}
-    for n in (1, 8):
-        with eng._activate():   # trace under the mesh, like the hot loop
-            txt = (eng._decode_fn(n)
-                   .lower(eng.params, eng.state, eng.ctrl).compile().as_text())
-        big = [s for s in _gather_sizes(txt) if s > 16384]
-        assert not big, f"large all-gather in steady-state decode: {big}"
-        counts[n] = _collective_counts(txt)
-        assert counts[n]["all-to-all"] == 0, counts[n]
-    assert counts[1] == counts[8], (
-        "collective count must be flat in the drain length", counts)
+    try:
+        decode = [hp for hp in eng.hot_paths() if hp.name == "lm.decode"]
+        assert len(decode) == 1
+        # budget as declared: 16 KiB gather bound, zero all-to-all, flat
+        # counts across the {1, drain_steps} family
+        assert decode[0].budget.max_gather_bytes == 16384
+        assert {p.label for p in decode[0].programs} == {"n=1", "n=8"}
+        viols = analysis.lint_hot_paths(decode)
+        assert not viols, analysis.format_report(viols)
 
-    # No inter-call resharding: run a real step and compare layouts.
-    eng.submit(Request(rid=0, prompt=np.array([5, 6, 7], np.int32),
-                       max_new_tokens=4))
-    eng._admit()
-    before = jax.tree.map(lambda l: l.sharding, eng.state)
-    eng.step()
-    after = jax.tree.map(lambda l: l.sharding, eng.state)
-    assert before == after
+        # No inter-call resharding: run a real step and compare layouts.
+        eng.submit(Request(rid=0, prompt=np.array([5, 6, 7], np.int32),
+                           max_new_tokens=4))
+        eng._admit()
+        before = jax.tree.map(lambda l: l.sharding, eng.state)
+        eng.step()
+        after = jax.tree.map(lambda l: l.sharding, eng.state)
+        assert before == after
+    finally:
+        eng.close()
 
 
 # -- mid-generation snapshot/restore on the serving mesh --------------------
@@ -250,8 +234,9 @@ def test_bitserial_matmul_sharded_parity():
 _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, re, sys
+import json, sys
 import jax, numpy as np
+from repro import analysis
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_serve_mesh
 from repro.models.lm import ModelConfig, init
@@ -275,24 +260,18 @@ def run(mesh):
 eng, shard = run(make_serve_mesh(2))
 assert sh.get_mesh() is None, "engine leaked its mesh"
 _, plain = run(None)
-with eng._activate():
-    txt = (eng._decode_fn(4)
-           .lower(eng.params, eng.state, eng.ctrl).compile().as_text())
-big = []
-for m in re.finditer(r"= (\w+)\[([\d,]*)\][^a-zA-Z]*all-gather", txt):
-    n = 1
-    for d in m.group(2).split(","):
-        if d:
-            n *= int(d)
-    if n * 4 > 16384:
-        big.append(m.group(0))
-print(json.dumps({"parity": plain == shard, "big_gathers": big}))
+# lint the sharded engine's decode hot path with the shared rule: the
+# 16 KiB gather bound, zero all-to-all and drain-length flatness
+decode = [hp for hp in eng.hot_paths() if hp.name == "lm.decode"]
+viols = analysis.lint_hot_paths(decode, rules=("collective-budget",))
+print(json.dumps({"parity": plain == shard,
+                  "violations": [str(v) for v in viols]}))
 """
 
 
 def test_sharded_serving_subprocess():
     """Tier-1 coverage without a multi-device parent: force 8 host devices
-    in a child process and check parity + the no-large-gather invariant."""
+    in a child process and check parity + the collective-budget invariant."""
     env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", _SUBPROC],
@@ -300,4 +279,4 @@ def test_sharded_serving_subprocess():
     assert out.returncode == 0, out.stderr[-2000:]
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["parity"], res
-    assert not res["big_gathers"], res
+    assert not res["violations"], res

@@ -6,13 +6,11 @@ divisibility guards, MoE expert-vs-ffn fallback, and an actual 8-device
 lower+compile in a subprocess (the main test process must stay at 1 device
 so smoke tests see an unsharded world)."""
 import json
-import math
 import os
 import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
