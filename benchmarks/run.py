@@ -7,8 +7,11 @@ additionally written to ``BENCH_kernels.json``, the serving section to
 fault sections to ``BENCH_faults.json`` at the repo root so future PRs can
 track the perf trajectory (cached-weight vs per-call serving, fused-conv
 vs im2col, backend sweep, engine hot-loop tokens/sec + TTFT,
-accuracy-vs-BER mitigation frontier). ``--smoke`` shrinks the serving and
-fault benchmarks to CI scale without changing the artifact shape.
+accuracy-vs-BER mitigation frontier). The MoE sections (packed expert
+banks vs float einsum, expert-parallel/pipelined engine scaling) also land
+in ``BENCH_serving.json`` under ``moe_layer``/``moe_device_scaling``.
+``--smoke`` shrinks the serving and fault benchmarks to CI scale without
+changing the artifact shape.
 """
 from __future__ import annotations
 
@@ -42,12 +45,16 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from . import (autotune_bench, cnn_bench, fault_bench, kernel_bench,
-                   lm_roofline, paper_figures, serve_bench)
+                   lm_roofline, moe_bench, paper_figures, serve_bench)
 
     serve_throughput = functools.partial(serve_bench.serve_throughput,
                                          smoke=args.smoke)
     serve_scaling = functools.partial(serve_bench.serve_device_scaling,
                                       smoke=args.smoke)
+    moe_layer = functools.partial(moe_bench.moe_layer_comparison,
+                                  smoke=args.smoke)
+    moe_scaling = functools.partial(moe_bench.moe_device_scaling,
+                                    smoke=args.smoke)
     serve_gateway = functools.partial(serve_bench.gateway_bench,
                                       smoke=args.smoke)
     cnn_throughput = functools.partial(cnn_bench.cnn_throughput,
@@ -83,6 +90,10 @@ def main(argv=None):
         ("serve: engine throughput (legacy vs fused hot loop)", serve_throughput),
         ("serve: device-count scaling (chips=data x banks=model mesh)",
          serve_scaling),
+        ("serve: MoE expert FFN packed vs float einsum (per-layer)",
+         moe_layer),
+        ("serve: MoE engine scaling (experts=chips / pipeline stages)",
+         moe_scaling),
         ("serve: overload gateway (Poisson mixed LM+vision load-gen)",
          serve_gateway),
         ("cnn: vision engine throughput (batch x precision x model)",
@@ -119,6 +130,10 @@ def main(argv=None):
                 serve_payload["serve_throughput"] = rows
             elif fn is serve_scaling:
                 serve_payload["device_scaling"] = rows
+            elif fn is moe_layer:
+                serve_payload["moe_layer"] = rows
+            elif fn is moe_scaling:
+                serve_payload["moe_device_scaling"] = rows
             elif fn is serve_gateway:
                 serve_payload["gateway"] = rows
             elif fn is cnn_throughput:

@@ -218,12 +218,21 @@ rng = np.random.default_rng(0)
 make_reqs = partial(_workload, 8, cfg.vocab, max_new, rng)
 ttft_prompt = (np.arange(1, 6, dtype=np.int32) % cfg.vocab).astype(np.int32)
 gen, dec, ttft = _measure(eng, make_reqs, ttft_prompt)
+# The mechanism gate: textual collective counts flat across the decode
+# drain family (n=1 vs n=drain_steps) proves every collective sits outside
+# the scan body — the property that survives on real accelerators, unlike
+# CPU-cell speedup (see serve_device_scaling's rationale).
+from repro.analysis import hlo
+hp = next(h for h in eng.hot_paths() if h.name.startswith("lm.decode"))
+counts = [hlo.collective_counts(p.compiled_text()) for p in hp.programs]
 print(json.dumps({
     "devices": n,
     "mesh": "-" if mesh is None else "%dx%d (data x model)" % (
         n // model_par, model_par),
     "gen_tok_s": round(gen, 1), "decode_tok_s": round(dec, 1),
-    "ttft_ms": round(ttft * 1e3, 1)}))
+    "ttft_ms": round(ttft * 1e3, 1),
+    "decode_collectives": counts[0],
+    "collectives_flat": all(c == counts[0] for c in counts)}))
 """
 
 
@@ -233,6 +242,16 @@ def serve_device_scaling(smoke: bool = False):
     Each cell runs in a subprocess so XLA_FLAGS can force that cell's host
     device count before jax initializes; the 1-device cell is the mesh-free
     engine (the baseline the speedup column normalizes against).
+
+    Expected regression on this CPU host: the 2-device cell decodes at
+    ~0.85x of 1 device. Forced host devices share the same cores, the
+    per-device shapes are tiny (d_model <= 128 decode GEMMs), and every
+    step pays a fixed collective-dispatch floor — so splitting the model
+    axis adds overhead without adding compute. This is the *mechanism*
+    sweep, not a speedup claim; the property CI gates on is
+    ``collectives_flat`` (textual collective counts identical across the
+    n=1 / n=drain_steps decode family, i.e. no collective inside the scan
+    body), which is what transfers to a real multi-chip deployment.
     """
     cells = [(1, 1), (2, 2)] if smoke else [(1, 1), (2, 2), (4, 2), (8, 2)]
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -252,6 +271,10 @@ def serve_device_scaling(smoke: bool = False):
     base = rows[0]["decode_tok_s"] or 1.0
     for r in rows:
         r["decode_speedup_vs_1dev"] = round(r["decode_tok_s"] / base, 2)
+    print("note: forced host devices share CPU cores — ~0.85x decode at "
+          "2 devices is the expected regression (tiny per-device shapes, "
+          "fixed collective-dispatch floor). The gated invariant is "
+          "collectives_flat, not speedup.")
     return rows
 
 

@@ -44,6 +44,42 @@ def _build_lm(mesh, max_batch):
                        sampler=SamplerConfig(temperature=0.0), mesh=mesh)
 
 
+def _build_moe_lm(mesh, max_batch):
+    """MoE engine: packed expert banks (expert-parallel program family on
+    a multi-device mesh — the dispatch a2a/combine budget, DESIGN.md §11)."""
+    import jax
+
+    from repro.core.pim_layers import PIMQuantConfig
+    from repro.models.lm import ModelConfig, init
+    from repro.models.lm.config import MoEConfig
+    from repro.serving import SamplerConfig, ServeEngine
+
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=61, remat="none", dtype="float32",
+                      moe=MoEConfig(n_experts=4, top_k=2),
+                      pim=PIMQuantConfig(w_bits=4, a_bits=4,
+                                         backend="int-direct"))
+    params = init(cfg, jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_batch=max_batch, max_len=64,
+                       sampler=SamplerConfig(temperature=0.0), mesh=mesh)
+
+
+def _build_pipe_lm(max_batch):
+    """Pipelined engine: the ``lm.decode.pipelined`` family (GPipe
+    fill-drain over a ('stage',) mesh; needs >= 2 devices, mesh-free)."""
+    import jax
+
+    from repro.models.lm import ModelConfig, init
+    from repro.serving import SamplerConfig, ServeEngine
+
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=61, remat="none", dtype="float32")
+    params = init(cfg, jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_batch=max_batch, max_len=64,
+                       sampler=SamplerConfig(temperature=0.0),
+                       pipeline_stages=2)
+
+
 def _build_cnn(mesh, max_batch):
     import jax
     import numpy as np
@@ -105,6 +141,9 @@ def main(argv=None):
     engines = []
     if args.workload in ("lm", "all"):
         engines.append(_build_lm(mesh, args.max_batch))
+        engines.append(_build_moe_lm(mesh, args.max_batch))
+        if n_dev > 1:   # pipeline stages need a second device
+            engines.append(_build_pipe_lm(args.max_batch))
     if args.workload in ("cnn", "all"):
         engines.append(_build_cnn(mesh, args.max_batch))
 

@@ -248,7 +248,9 @@ def tile_legality(hp):
                     "(no GSPMD rule: the planes would all-gather every "
                     "step)")
             mat = pw.mat if isinstance(pw, PackedConvWeight) else pw
-            n = int(mat.codes.shape[1])
+            # shape[-1], not [1]: expert-stacked banks carry (E, K, N) (or
+            # (R, E, K, N)) codes — N is always the trailing dim.
+            n = int(mat.codes.shape[-1])
             kw = int(mat.planes.shape[-1])
             m = None if isinstance(pw, PackedConvWeight) \
                 else hp.budget.m_hint

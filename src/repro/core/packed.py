@@ -81,8 +81,15 @@ class PackedWeight:
         return self.codes.shape
 
     def to_float(self) -> jax.Array:
-        """Dequantized master weight (fallback for non-quantized paths)."""
-        return dequantize(self.codes, self.wq)
+        """Dequantized master weight (fallback for non-quantized paths).
+
+        Works on stacked prepacks too (scan reps and/or expert banks): every
+        leading axis beyond the (K, N) matrix carries its own ``wq`` entry,
+        so dequantization vmaps over the stack."""
+        fn = dequantize
+        for _ in range(self.codes.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(self.codes, self.wq)
 
 
 @jax.tree_util.register_dataclass
@@ -121,7 +128,12 @@ def prepack(w: jax.Array, w_bits: int, mesh=None, axis: str = "model",
     """Quantize + bit-slice + lane-pack a (K, N) weight once.
 
     Everything here is jnp, so ``jax.vmap(prepack)`` prepacks scan-stacked
-    (R, K, N) parameter leaves (the LM layer stack) in one shot.
+    (R, K, N) parameter leaves (the LM layer stack) in one shot — and
+    ``jax.vmap`` again for MoE expert banks: an (E, K, N) expert stack
+    packs to codes (E, K, N), planes (E, bits, N, KW), col_sums (E, N)
+    with per-expert ``wq`` leaves of shape (E,), the layout
+    ``shard_packed(split="e")`` deals out expert-wise (experts = the
+    paper's chips) and ``moe_ffn`` contracts per expert under ``vmap``.
 
     ``mesh``: distribute the packed planes across a device mesh right after
     packing (the paper's banks each receiving their weight columns) — see
@@ -161,6 +173,16 @@ def shard_packed(pw: PackedWeight | PackedConvWeight, mesh,
     only support the bank split: their contraction dim (KH*KW*C) has no
     aligned per-kernel-row decomposition across shards.
 
+    ``split="e"`` — the *chip* mapping for expert-stacked prepacks (a
+    ``jax.vmap(prepack)`` over an (E, K, N) expert bank): whole experts are
+    dealt out across ``axis``, every field — codes, planes, col_sums and
+    the per-expert ``wq`` leaves — splitting on its leading E dim. Each
+    shard holds complete subarray images for its experts, so the per-expert
+    GEMMs run collective-free and only the token dispatch/combine
+    communicates (expert parallelism; DESIGN.md §11). Requires a stacked
+    prepack (codes ndim >= 3); scan-stacked expert banks ((R, E, K, N))
+    split the E dim one position in.
+
     Dims that do not divide the axis stay replicated via the sharding-rule
     guard — which warns once per drop, so a "bank-sharded" deployment that
     actually replicated (non-divisible N or KW) is visible. Scan-stacked
@@ -170,8 +192,10 @@ def shard_packed(pw: PackedWeight | PackedConvWeight, mesh,
 
     from repro.distributed.sharding import _guard
 
-    if split not in ("n", "k"):
-        raise ValueError(f"split {split!r}: want 'n' (banks) | 'k' (subarrays)")
+    if split not in ("n", "k", "e"):
+        raise ValueError(
+            f"split {split!r}: want 'n' (banks) | 'k' (subarrays) | "
+            "'e' (expert chips)")
     if isinstance(pw, PackedConvWeight):
         if split != "n":
             raise ValueError(
@@ -193,6 +217,28 @@ def shard_packed(pw: PackedWeight | PackedConvWeight, mesh,
         spec = _guard((None,) * stack + tuple(spec), leaf.shape, mesh,
                       label=f"shard_packed:{field}")
         return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    if split == "e":
+        if pw.codes.ndim < 3:
+            raise ValueError(
+                "split='e' needs an expert-stacked prepack "
+                f"(codes ndim >= 3, got {pw.codes.ndim})")
+
+        def put_e(leaf, rank, field):
+            # Expert dim sits just above the per-expert logical rank; any
+            # further leading dims (scan reps) stay replicated.
+            pos = leaf.ndim - rank - 1
+            spec = _guard((None,) * pos + (axis,) + (None,) * rank,
+                          leaf.shape, mesh, label=f"shard_packed:{field}")
+            return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+        return PackedWeight(
+            codes=put_e(pw.codes, 2, "codes"),
+            planes=put_e(pw.planes, 3, "planes"),
+            col_sums=put_e(pw.col_sums, 1, "col_sums"),
+            wq=jax.tree.map(lambda l: put_e(l, 0, "wq"), pw.wq),
+            tune=pw.tune,
+        )
 
     k_ax, n_ax = (axis, None) if split == "k" else (None, axis)
     return PackedWeight(

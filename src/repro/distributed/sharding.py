@@ -378,6 +378,25 @@ def _serve_param_spec(path, leaf, mesh: Mesh) -> P:
     rule = None if name == "embed" else _PARAM_RULES.get(name)
     if rule is None:
         return P(*(None,) * leaf.ndim)
+    if "ffn" in dicts and name in _MOE_3D:
+        # Expert-stacked MoE bank (float (E, d, f) or an expert-vmapped
+        # PackedWeight, possibly under a scan-reps axis). Experts = the
+        # paper's chips: when E divides the "model" axis, whole experts
+        # deal out across it — every field, including the per-expert wq
+        # leaves — so each bank's GEMMs are collective-free and only the
+        # token dispatch/combine communicates (DESIGN.md §11). When E
+        # doesn't divide (grok's 8e on a wider axis), fall through to the
+        # padded TP mapping: d_ff splits inside every expert.
+        stacked = 1 if (dicts and dicts[0] == "scan") else 0
+        field = attrs[0] if attrs else None
+        rank = {"codes": 2, "planes": 3, "col_sums": 1, "wq": 0,
+                None: 2}.get(field)
+        if rank is not None and leaf.ndim == rank + stacked + 1:
+            e = leaf.shape[stacked]
+            ms = axis_size(mesh, "model")
+            if ms > 1 and e % ms == 0:
+                return _guard((None,) * stacked + ("model",) + (None,) * rank,
+                              leaf.shape, mesh, label=f"serve-param:{name}:ep")
     base = tuple("model" if t == "tp" else None for t in rule)
     if attrs:
         # Inside a PackedWeight: map the logical (K, N) rule onto the packed

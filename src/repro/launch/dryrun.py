@@ -96,6 +96,39 @@ def _count_arrays_bytes(tree) -> int:
     return sum(math.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree))
 
 
+def _pim_accounting(cfg, params_abs) -> dict:
+    """Deployment-time packed-plane accounting (abstract, via eval_shape).
+
+    Mirrors what the engine's prepack would allocate on the serving fleet:
+    per-leaf uint32 bit-plane and int32 code bytes, with MoE expert banks
+    (``w_in``/``w_out``/``w_gate`` under a router-bearing ffn — packed one
+    vmap level deeper, (E, d, f) per layer) broken out so the dry-run's
+    capacity math covers the paper's subarray images for *every* expert,
+    not just the top-k active ones.
+    """
+    from repro.core.packed import PackedWeight
+    from repro.models.lm.model import prepack_params
+
+    packed = jax.eval_shape(lambda p: prepack_params(p, cfg.pim), params_abs)
+    flat = jax.tree_util.tree_flatten_with_path(
+        packed, is_leaf=lambda x: isinstance(x, PackedWeight))[0]
+    out = {"packed_leaves": 0, "plane_bytes": 0, "code_bytes": 0,
+           "expert_banks": 0, "expert_plane_bytes": 0}
+    for path, leaf in flat:
+        if not isinstance(leaf, PackedWeight):
+            continue
+        pb = math.prod(leaf.planes.shape) * leaf.planes.dtype.itemsize
+        out["packed_leaves"] += 1
+        out["plane_bytes"] += pb
+        out["code_bytes"] += (math.prod(leaf.codes.shape)
+                              * leaf.codes.dtype.itemsize)
+        keys = [getattr(k, "key", None) for k in path]
+        if cfg.moe and "ffn" in keys:
+            out["expert_banks"] += 1
+            out["expert_plane_bytes"] += pb
+    return out
+
+
 def lower_cell(arch: ArchConfig, shape: ShapeSpec, mesh, verbose=True):
     """Lower + compile one cell; returns (compiled, report dict)."""
     cfg = arch.model
@@ -201,6 +234,8 @@ def lower_cell(arch: ArchConfig, shape: ShapeSpec, mesh, verbose=True):
         "n_params": n_params,
         "n_active_params": n_active,
         "param_bytes_per_chip": _count_arrays_bytes(params_abs) / chips,
+        "pim": (_pim_accounting(cfg, params_abs)
+                if getattr(cfg.pim, "enabled", False) else None),
         "roofline": rf.report(),
         "collectives": {"op_counts": cost.coll_counts,
                         "bytes_by_kind": cost.coll_bytes,

@@ -98,7 +98,9 @@ def serve_gateway(args, mesh, cfg, params):
                       max_len=args.max_len,
                       sampler=SamplerConfig(temperature=args.temperature),
                       mesh=mesh, autotune=args.autotune,
-                      tuning_cache=args.tuning_cache)
+                      tuning_cache=args.tuning_cache,
+                      pipeline_stages=args.pipeline_stages,
+                      pipeline_microbatches=args.pipeline_microbatches)
     gw_cfg = GatewayConfig(queue_depth=args.queue_depth,
                            default_deadline_ms=args.deadline_ms)
     rng = np.random.default_rng(0)
@@ -182,6 +184,13 @@ def main():
                     help="devices per model replica (the mesh's 'model' "
                     "axis); the rest shard decode slots / image batches "
                     "on 'data'")
+    ap.add_argument("--pipeline-stages", type=int, default=1,
+                    help="pipeline the scanned layer stack over N devices "
+                    "on a ('stage',) mesh (GPipe fill-drain decode; "
+                    "DESIGN.md §11). Mutually exclusive with --model-par")
+    ap.add_argument("--pipeline-microbatches", type=int, default=None,
+                    help="microbatches streamed through the pipe per decode "
+                    "step (default: --pipeline-stages)")
     # --workload cnn
     ap.add_argument("--cnn-model", choices=CNN_MODELS, default="resnet50")
     ap.add_argument("--image", type=int, default=64)
@@ -202,7 +211,14 @@ def main():
     args = ap.parse_args()
 
     mesh = None
-    if len(jax.devices()) > 1 or args.model_par > 1:
+    if args.pipeline_stages > 1:
+        if args.model_par > 1:
+            raise SystemExit("--pipeline-stages and --model-par are "
+                             "alternative decode compositions; pick one")
+        print(f"pipelined decode over {args.pipeline_stages} stage(s), "
+              f"{args.pipeline_microbatches or args.pipeline_stages} "
+              "microbatch(es)")
+    elif len(jax.devices()) > 1 or args.model_par > 1:
         mesh = make_serve_mesh(args.model_par)
         print(f"serving on mesh {dict(mesh.shape)} "
               f"({len(mesh.devices.ravel())} devices)")
@@ -226,7 +242,9 @@ def main():
                       max_len=args.max_len,
                       sampler=SamplerConfig(temperature=args.temperature),
                       mesh=mesh, autotune=args.autotune,
-                      tuning_cache=args.tuning_cache)
+                      tuning_cache=args.tuning_cache,
+                      pipeline_stages=args.pipeline_stages,
+                      pipeline_microbatches=args.pipeline_microbatches)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):

@@ -83,10 +83,19 @@ def init_block(kind: str, cfg: ModelConfig, key):
     return p
 
 
+def _zero_aux():
+    """Per-block aux accumulator: MoE balance loss plus routing telemetry
+    (dropped-assignment fraction, summed over MoE layers with a layer count
+    so the engine can report a mean). A dict of f32 scalars so it threads
+    through ``lax.scan`` like the old bare scalar did."""
+    z = jnp.zeros((), jnp.float32)
+    return {"loss": z, "drop": z, "layers": z}
+
+
 def apply_block(kind: str, p, cfg: ModelConfig, x, q_pos, state=None,
                 cache_index=None, image_embeds=None, train=False):
-    """Pre-norm residual block. Returns (x, new_state, aux)."""
-    aux = jnp.zeros((), jnp.float32)
+    """Pre-norm residual block. Returns (x, new_state, aux dict)."""
+    aux = _zero_aux()
     h = apply_norm(cfg.norm, p["norm1"], x, cfg.norm_eps)
     if kind in ("attn", "local_attn", "cross_attn"):
         window = cfg.local_window if kind == "local_attn" else 0
@@ -195,6 +204,10 @@ _PIM_PROJ_KEYS = frozenset({
     "head",                                      # untied lm head
 })
 
+# Expert-bank leaves inside a router-bearing dict — (E, d, f)-stacked, packed
+# one vmap level deeper than the scan stack (the router itself stays float).
+_MOE_EXPERT_KEYS = frozenset({"w_in", "w_out", "w_gate"})
+
 
 def prepack_params(params, cfg, mesh=None, faults=None):
     """Quantize + pack every pim_linear projection weight exactly once.
@@ -203,11 +216,15 @@ def prepack_params(params, cfg, mesh=None, faults=None):
     repeated ``decode_step``/``prefill`` calls never re-calibrate, re-quantize
     or re-pack a weight. Scan-stacked leaves (R, K, N) prepack under ``vmap``
     so the layer scan slices per-rep :class:`PackedWeight` pytrees exactly as
-    it slices raw arrays. Left as floats: tied embeddings (the lm_head reuses
-    the embedding matrix, whose primary role is the token gather) and MoE
-    expert banks (``moe_ffn`` contracts them via batched einsum, not
-    ``pim_linear`` — their (E, d, f) shape collides with the stacked-MLP key
-    names, so the whole router-bearing dict is excluded).
+    it slices raw arrays. MoE expert banks pack the same way, one ``vmap``
+    level deeper: ``w_in``/``w_out``/``w_gate`` inside a router-bearing dict
+    are (E, d, f) (or (R, E, d, f) scan-stacked) and prepack per expert, the
+    layout ``moe_ffn`` contracts through ``int_matmul_prepacked`` under
+    ``vmap`` (DESIGN.md §11). The ``router`` itself stays float: the top-k
+    gate is tiny, runs in f32 by contract, and keeping it float makes the
+    packed path's routing decisions bit-identical to the float reference.
+    Left as floats otherwise: tied embeddings (the lm_head reuses the
+    embedding matrix, whose primary role is the token gather).
 
     ``mesh``: additionally distribute the (packed or float) tree with the
     serving shardings — every projection's output dim, and for packed
@@ -238,14 +255,19 @@ def prepack_params(params, cfg, mesh=None, faults=None):
 
     def pack_leaf(leaf):
         fn = functools.partial(prepack, w_bits=cfg.w_bits)
-        if leaf.ndim == 3:               # scan-stacked (R, K, N)
+        for _ in range(leaf.ndim - 2):   # scan reps and/or expert stacks
             fn = jax.vmap(fn)
         return fn(leaf.astype(jnp.float32))
 
     def walk(p):
         if isinstance(p, dict):
-            if "router" in p:            # MoE expert bank: einsum consumers
-                return p
+            if "router" in p:            # MoE: pack experts, router stays f32
+                return {k: (pack_leaf(v)
+                            if (k in _MOE_EXPERT_KEYS and hasattr(v, "ndim")
+                                and v.ndim in (3, 4)
+                                and jnp.issubdtype(v.dtype, jnp.floating))
+                            else v)
+                        for k, v in p.items()}
             return {k: (pack_leaf(v)
                         if (k in _PIM_PROJ_KEYS and hasattr(v, "ndim")
                             and v.ndim in (2, 3)
@@ -285,26 +307,26 @@ def _run_blocks(params, cfg: ModelConfig, x, q_pos, states=None, cache_index=Non
     (n_reps,) axis, so the layer scan threads them through with zero
     stack/unstack copies (they alias straight into the while-loop carry)."""
     unit, reps, rest = layer_plan(cfg)
-    aux_total = jnp.zeros((), jnp.float32)
+    aux_total = _zero_aux()
 
     # -- scanned repetitions --
     def unit_fn(x, per_rep):
         p_list, s_list = per_rep
-        new_states, aux = [], jnp.zeros((), jnp.float32)
+        new_states, aux = [], _zero_aux()
         x = constrain_batch(x)  # keep the batch pinned to DP through the scan
         for j, kind in enumerate(unit):
             s = s_list[j] if s_list is not None else None
             x, ns, a = apply_block(kind, p_list[j], cfg, x, q_pos, s,
                                    cache_index, image_embeds, train)
             new_states.append(ns)
-            aux += a
+            aux = jax.tree.map(jnp.add, aux, a)
         return x, (new_states, aux)
 
     scan_states = states["scan"] if states is not None else None
     body = _maybe_remat(unit_fn, cfg) if train else unit_fn
     x, (new_scan_states, auxs) = jax.lax.scan(
         body, x, (params["scan"], scan_states))
-    aux_total += auxs.sum()
+    aux_total = jax.tree.map(lambda t, a: t + a.sum(), aux_total, auxs)
 
     # -- remainder layers (unrolled) --
     new_rest_states = []
@@ -313,7 +335,7 @@ def _run_blocks(params, cfg: ModelConfig, x, q_pos, states=None, cache_index=Non
         x, ns, a = apply_block(kind, params["rest"][i], cfg, x, q_pos, s,
                                cache_index, image_embeds, train)
         new_rest_states.append(ns)
-        aux_total += a
+        aux_total = jax.tree.map(jnp.add, aux_total, a)
 
     new_states = None
     if states is not None:
@@ -345,7 +367,7 @@ def forward(params, cfg: ModelConfig, tokens, image_embeds=None, train=False):
     x, _, aux = _run_blocks(params, cfg, x, q_pos, image_embeds=image_embeds,
                             train=train)
     x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
-    return lm_head(params, cfg, x), aux
+    return lm_head(params, cfg, x), aux["loss"]
 
 
 def _xent(logits, labels):
@@ -384,27 +406,38 @@ def loss_fn(params, cfg: ModelConfig, batch, train=True):
     else:
         logits = lm_head(params, cfg, x)
         loss = _xent(logits, labels).mean()
-    return loss + aux
+    return loss + aux["loss"]
 
 
 # ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------
 
-def decode_step(params, cfg: ModelConfig, tokens, state, image_embeds=None):
+def decode_step(params, cfg: ModelConfig, tokens, state, image_embeds=None,
+                return_stats=False):
     """One decode step. tokens (B, 1) (or (B,1,d) embeds) -> (logits, state).
 
     ``state["length"]`` is (B,): every slot of a continuous-batching grid
-    decodes against its own position/offset."""
+    decodes against its own position/offset.
+
+    ``return_stats`` (static) appends a per-step telemetry dict —
+    ``moe_drop_frac``, the fraction of this step's top-k routing
+    assignments dropped at capacity, averaged over MoE layers (0.0 for
+    dense models) — which the engine feeds into its ``stats()`` ring
+    buffers."""
     x = embed_inputs(params, cfg, tokens)
     b = x.shape[0]
     idx = jnp.broadcast_to(state["length"], (b,)).astype(jnp.int32)
     q_pos = idx[:, None]
-    x, new_state, _ = _run_blocks(params, cfg, x, q_pos, states=state,
-                                  cache_index=idx, image_embeds=image_embeds)
+    x, new_state, aux = _run_blocks(params, cfg, x, q_pos, states=state,
+                                    cache_index=idx, image_embeds=image_embeds)
     x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
     logits = lm_head(params, cfg, x)
     new_state["length"] = state["length"] + 1
+    if return_stats:
+        stats = {"moe_drop_frac": aux["drop"]
+                 / jnp.maximum(aux["layers"], 1.0)}
+        return logits, new_state, stats
     return logits, new_state
 
 

@@ -17,13 +17,30 @@ shards (tensor parallelism inside every expert — grok's 8 experts on a
 16-wide axis). ``repro.distributed.sharding`` applies those rules via
 ``with_sharding_constraint``; this module is mesh-agnostic.
 
+The expert FFN itself has two executions sharing the dispatch/combine code
+(so capacity/drop semantics are bit-identical between them):
+
+  * float einsum — weights are raw (E, d, f) arrays; the training path and
+    the serving float fallback (also the perf baseline ``moe_bench``
+    measures the packed path against);
+  * packed bit-serial — weights arrived as expert-stacked
+    :class:`~repro.core.packed.PackedWeight` banks (``prepack_params``).
+    The dispatched activations quantize *once*, before the sort/scatter,
+    so dispatch moves int32 codes; each expert then runs
+    ``int_matmul_prepacked`` + the Eq. 2 affine correction under
+    ``jax.vmap`` over the expert bank (experts = the paper's chips, each
+    contracting its own subarray image; DESIGN.md §11).
+
 Aux losses follow the standard load-balancing recipe (mean gate * mean
-assignment per expert) plus router z-loss.
+assignment per expert) plus router z-loss; the aux dict additionally
+carries the dropped-assignment fraction for engine telemetry.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.packed import PackedWeight
 
 from .config import ModelConfig
 
@@ -49,8 +66,86 @@ def _capacity(tokens: int, cfg: ModelConfig) -> int:
     return max(c + (-c) % 8, 8)  # sublane-align
 
 
+def _packed_expert_ffn(p, cfg: ModelConfig, xg, slot, src_token,
+                       g: int, e: int, cap: int, ep_ok: bool, act):
+    """Expert FFN over prepacked bit-serial banks. Returns yb (g, e, cap, d).
+
+    Fused quantize -> pack: the group activations calibrate and quantize
+    once (per-tensor, Eq. 2) *before* dispatch, so the sort/scatter moves
+    int32 codes rather than floats — the (E, C, d) buffer lands in code
+    space and each expert's ``int_matmul_prepacked`` consumes it directly.
+    Unfilled capacity slots hold code 0 (the dequantized minimum); their
+    rows produce finite garbage that the combine's keep-mask never gathers.
+    The hidden activations re-calibrate per expert for the w_out GEMM (the
+    per-call activation-quantization idiom of ``pim_conv2d``).
+
+    ``ep_ok``: expert-parallel serve layout — pin the per-expert operand
+    stacks to the "model" axis so the only collectives GSPMD emits are the
+    dispatch all-to-all (DP-sharded tokens -> E-sharded buffer) and the
+    combine back. Packed weights only exist on the serving path, so these
+    constraints never touch the (deliberately unconstrained) EP training
+    einsums above.
+    """
+    from repro.core.bitserial import int_matmul_prepacked
+    from repro.core.quantize import (affine_correction, calibrate_minmax,
+                                     quantize)
+    from repro.distributed import sharding as sh
+    from jax.sharding import PartitionSpec as P
+
+    pim = cfg.pim
+    a_bits = pim.a_bits if pim is not None else 8
+    backend = pim.backend if pim is not None else "int-direct"
+    d = xg.shape[-1]
+    f = p["w_in"].codes.shape[-1]
+    mesh = sh.get_mesh()
+
+    def ce(arr):  # expert dim on "model" (EP serve layout only)
+        if mesh is None or not ep_ok:
+            return arr
+        return sh.constrain(arr, P("model", *(None,) * (arr.ndim - 1)))
+
+    aq = calibrate_minmax(xg.astype(jnp.float32), a_bits)
+    qxg = quantize(xg, aq)                                   # (g, tl, d) i32
+    vals = jnp.take_along_axis(qxg, src_token[..., None], axis=1)
+    gidx = jnp.arange(g)[:, None]
+    buf = jnp.zeros((g, e * cap + 1, d), jnp.int32).at[gidx, slot].set(vals)
+    qa = buf[:, :-1].reshape(g, e, cap, d)
+    qa = ce(qa.transpose(1, 0, 2, 3).reshape(e, g * cap, d))  # (E, M, d)
+    # Occupancy mask: unfilled slots zero after stage 1 (the float path's
+    # empty rows), so they can't inflate the per-expert hidden calibration.
+    filled = jnp.zeros((g, e * cap + 1), jnp.float32).at[gidx, slot].set(1.0)
+    filled = filled[:, :-1].reshape(g, e, cap)
+    filled = ce(filled.transpose(1, 0, 2).reshape(e, g * cap, 1))
+
+    def stage1(w):
+        def f1(qa_e, w_e):
+            prod = int_matmul_prepacked(qa_e, w_e, a_bits, backend=backend)
+            sa = qa_e.sum(-1, keepdims=True)
+            return affine_correction(prod, sa, w_e.col_sums, d, aq, w_e.wq)
+        return ce(jax.vmap(f1)(qa, w))
+
+    h = stage1(p["w_in"])                                    # (E, M, f) f32
+    h = act(stage1(p["w_gate"])) * h if "w_gate" in p else act(h)
+    h = h * filled
+
+    def f2(h_e, w_e):
+        hq = calibrate_minmax(h_e, a_bits)
+        qh = quantize(h_e, hq)
+        prod = int_matmul_prepacked(qh, w_e, a_bits, backend=backend)
+        sa = qh.sum(-1, keepdims=True)
+        return affine_correction(prod, sa, w_e.col_sums, f, hq, w_e.wq)
+
+    yb = ce(jax.vmap(f2)(h, p["w_out"]))                     # (E, M, d) f32
+    return yb.reshape(e, g, cap, d).transpose(1, 0, 2, 3).astype(xg.dtype)
+
+
 def moe_ffn(p, cfg: ModelConfig, x: jax.Array, train: bool = False):
-    """x: (B, S, d) -> (out (B, S, d), aux-loss scalar).
+    """x: (B, S, d) -> (out (B, S, d), aux dict).
+
+    ``aux["loss"]`` is the balance + z loss scalar; ``aux["drop"]`` the
+    fraction of top-k assignments dropped at capacity this call (routing
+    overflow telemetry) and ``aux["layers"]`` a 1.0 layer counter so
+    callers can average drop over depth.
 
     Group-batched sort dispatch: tokens route within their data-parallel
     shard group (own capacity — per-device capacity semantics of
@@ -117,45 +212,53 @@ def moe_ffn(p, cfg: ModelConfig, x: jax.Array, train: bool = False):
     slot = jnp.where(keep, sorted_expert * cap + rank, e * cap)
     src_token = order // k                                   # (G, T_l*k)
 
-    vals = jnp.take_along_axis(xg, src_token[..., None], axis=1)
     gidx = jnp.arange(g)[:, None]
-    buf = jnp.zeros((g, e * cap + 1, d), x.dtype).at[gidx, slot].set(vals)
-    buf = buf[:, :-1].reshape(g, e, cap, d)
-
-    # ---- batched expert FFN ----
-    # TP-expert case (E doesn't divide the TP axis, e.g. grok 8e/16): pin
-    # buffers/weights so the hidden dim shards on TP and weights gather
-    # their FSDP axis — unconstrained, GSPMD partial-reduced the (much
-    # larger) activations over the data axis (§Perf/grok). EP case (E
-    # divides, e.g. phi 16e/16): the at-rest expert sharding propagates
-    # best UNconstrained — forcing the EP all-to-all through a dynamic
-    # scatter regressed 4x (measured; see §Perf).
     act = _ACTS[cfg.act.split("_")[0]]
-    tp = ("model",) if (tp_ok and not ep_ok) else (None,)
 
-    def cw(wt, *spec):  # constrain an expert weight at use (TP case only)
-        if mesh is None or ep_ok:
-            return wt
-        return sh.constrain(wt, P(*spec))
-
-    def ca(arr, *spec):  # constrain an activation (TP case only)
-        if ep_ok:
-            return arr
-        return cg(arr, *spec)
-
-    buf = ca(buf, None, None, None)
-    w_in = cw(p["w_in"], None, None, *tp)
-    h = jnp.einsum("gecd,edf->gecf", buf, w_in.astype(x.dtype))
-    h = ca(h, None, None, *tp)
-    if "w_gate" in p:
-        w_gate = cw(p["w_gate"], None, None, *tp)
-        gt = jnp.einsum("gecd,edf->gecf", buf, w_gate.astype(x.dtype))
-        h = act(ca(gt, None, None, *tp)) * h
+    if isinstance(p["w_in"], PackedWeight):
+        # ---- packed bit-serial expert FFN (serving fast path) ----
+        # Same slot/keep dispatch as below, but the scatter moves int32
+        # codes and each expert contracts its prepacked subarray image.
+        yb = _packed_expert_ffn(p, cfg, xg, slot, src_token,
+                                g, e, cap, ep_ok, act)
     else:
-        h = act(h)
-    w_out = cw(p["w_out"], None, *tp, None)
-    yb = jnp.einsum("gecf,efd->gecd", h, w_out.astype(x.dtype))
-    yb = ca(yb, None, None, None)
+        vals = jnp.take_along_axis(xg, src_token[..., None], axis=1)
+        buf = jnp.zeros((g, e * cap + 1, d), x.dtype).at[gidx, slot].set(vals)
+        buf = buf[:, :-1].reshape(g, e, cap, d)
+
+        # ---- batched expert FFN (float einsum) ----
+        # TP-expert case (E doesn't divide the TP axis, e.g. grok 8e/16): pin
+        # buffers/weights so the hidden dim shards on TP and weights gather
+        # their FSDP axis — unconstrained, GSPMD partial-reduced the (much
+        # larger) activations over the data axis (§Perf/grok). EP case (E
+        # divides, e.g. phi 16e/16): the at-rest expert sharding propagates
+        # best UNconstrained — forcing the EP all-to-all through a dynamic
+        # scatter regressed 4x (measured; see §Perf).
+        tp = ("model",) if (tp_ok and not ep_ok) else (None,)
+
+        def cw(wt, *spec):  # constrain an expert weight at use (TP case only)
+            if mesh is None or ep_ok:
+                return wt
+            return sh.constrain(wt, P(*spec))
+
+        def ca(arr, *spec):  # constrain an activation (TP case only)
+            if ep_ok:
+                return arr
+            return cg(arr, *spec)
+
+        buf = ca(buf, None, None, None)
+        w_in = cw(p["w_in"], None, None, *tp)
+        h = jnp.einsum("gecd,edf->gecf", buf, w_in.astype(x.dtype))
+        h = ca(h, None, None, *tp)
+        if "w_gate" in p:
+            w_gate = cw(p["w_gate"], None, None, *tp)
+            gt = jnp.einsum("gecd,edf->gecf", buf, w_gate.astype(x.dtype))
+            h = act(ca(gt, None, None, *tp)) * h
+        else:
+            h = act(h)
+        w_out = cw(p["w_out"], None, *tp, None)
+        yb = jnp.einsum("gecf,efd->gecd", h, w_out.astype(x.dtype))
+        yb = ca(yb, None, None, None)
 
     # ---- combine ----
     ybf = yb.reshape(g, e * cap, d)
@@ -167,4 +270,6 @@ def moe_ffn(p, cfg: ModelConfig, x: jax.Array, train: bool = False):
     out = jnp.zeros((g, tl, d), x.dtype).at[gidx, src_token].add(
         y_sorted * w_sorted)
     out = cg(out, None, None)
-    return out.reshape(b, s, d), aux + z
+    drop = jnp.mean(1.0 - keep.astype(jnp.float32))
+    return out.reshape(b, s, d), {"loss": aux + z, "drop": drop,
+                                  "layers": jnp.ones((), jnp.float32)}

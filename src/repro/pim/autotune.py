@@ -464,9 +464,20 @@ def attach_conv(pcw: PackedConvWeight, d: TuneDecision | None,
                                mat=dataclasses.replace(pcw.mat, tune=mat))
 
 
+_MOE_EXPERT_NAMES = ("w_in", "w_out", "w_gate")
+
+
+def _is_expert_path(path) -> bool:
+    """True for packed leaves living at ``...['ffn']...['w_in'|'w_out'|
+    'w_gate']`` — the expert-stacked MoE banks (callers only enable the
+    check for MoE configs, where every ffn projection is an expert bank)."""
+    keys = [getattr(k, "key", None) for k in path]
+    return "ffn" in keys and keys and keys[-1] in _MOE_EXPERT_NAMES
+
+
 def tune_tree(tree, *, m_hint: int, a_bits: int, backends=None,
               mode: str = "cost", cache=None, conv_m_hint: int | None = None,
-              measure=None):
+              measure=None, moe_m_hint: int | None = None):
     """Attach decisions to every packed leaf of a prepacked param tree.
 
     ``m_hint`` is the GEMM row count the deployment runs (the serving
@@ -475,13 +486,19 @@ def tune_tree(tree, *, m_hint: int, a_bits: int, backends=None,
     the backend crossover is driven by the plane-pair count, which this
     estimate preserves). Decisions dedupe through the cache: scan-stacked
     layer leaves with equal (k, n, bits) decide once.
+
+    ``moe_m_hint`` (MoE deployments): the expert banks' GEMMs run batched
+    over every expert's capacity buffer, so their decisions key on the
+    E*C dispatch row count instead of the token batch — and their
+    candidate set drops "pallas" (the per-expert dispatch runs under
+    ``vmap``, which the interpret-mode kernel does not batch).
     """
     import jax
 
     backends = tuple(backends) if backends else XLA_BACKENDS
     xla_only = tuple(b for b in backends if b != "pallas") or backends
 
-    def visit(leaf):
+    def visit(path, leaf):
         if isinstance(leaf, PackedConvWeight):
             _, _, _, o = leaf.kernel_shape
             kdim = leaf.mat.codes.shape[-2]
@@ -495,13 +512,16 @@ def tune_tree(tree, *, m_hint: int, a_bits: int, backends=None,
                                mat=d)
         if isinstance(leaf, PackedWeight):
             *_, k, n = leaf.codes.shape
-            d = decide_gemm(m_hint, k, n, a_bits, leaf.bits,
-                            backends=backends, mode=mode, cache=cache,
+            m, be = m_hint, backends
+            if moe_m_hint is not None and _is_expert_path(path):
+                m, be = moe_m_hint, xla_only
+            d = decide_gemm(m, k, n, a_bits, leaf.bits,
+                            backends=be, mode=mode, cache=cache,
                             measure=measure)
             return attach(leaf, d)
         return leaf
 
-    return jax.tree_util.tree_map(
+    return jax.tree_util.tree_map_with_path(
         visit, tree,
         is_leaf=lambda x: isinstance(x, (PackedWeight, PackedConvWeight)))
 

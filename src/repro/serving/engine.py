@@ -120,13 +120,64 @@ class ServeEngine:
                  seed: int = 0, drain_steps: int = 8, mesh=None,
                  faults=None, watchdog=None, fault_injector=None,
                  keep_masters: bool = False, autotune: str = "off",
-                 tuning_cache=None):
+                 tuning_cache=None, pipeline_stages: int = 1,
+                 pipeline_microbatches: int | None = None):
         if autotune not in ("off", "cost", "measure"):
             raise ValueError(
                 f"autotune {autotune!r}: want 'off' | 'cost' | 'measure'")
         self.cfg = cfg
         self.mesh = mesh
         self.autotune = autotune
+        self.pipeline_stages = max(1, int(pipeline_stages))
+        self._pipe_mesh = None
+        self._step_fn = decode_step
+        if self.pipeline_stages > 1:
+            # Pipeline-composed decode (DESIGN.md §11): the scanned unit
+            # repetitions split over a dedicated 1-D ("stage",) mesh and
+            # microbatches stream through GPipe-style. Mutually exclusive
+            # with the ("data", "model") serving mesh — stage permutes and
+            # GSPMD resharding do not compose in one program here.
+            if mesh is not None:
+                raise ValueError(
+                    "pipeline_stages > 1 builds its own ('stage',) mesh; "
+                    "pass mesh=None (data/model sharding and the pipeline "
+                    "schedule are alternative decode compositions)")
+            from repro.models.lm.model import layer_plan
+
+            _, reps, _ = layer_plan(cfg)
+            if reps % self.pipeline_stages:
+                raise ValueError(
+                    f"cannot pipeline: {reps} scanned repetition(s) do not "
+                    f"factor into {self.pipeline_stages} equal stages")
+            n_micro = pipeline_microbatches or self.pipeline_stages
+            if max_batch % n_micro:
+                raise ValueError(
+                    f"cannot pipeline: max_batch {max_batch} does not split "
+                    f"into {n_micro} equal microbatches")
+            devs = jax.devices()
+            if len(devs) < self.pipeline_stages:
+                raise ValueError(
+                    f"pipeline_stages={self.pipeline_stages} needs that many "
+                    f"devices; have {len(devs)}")
+            from jax.sharding import Mesh
+
+            from repro.distributed.pipeline import pipeline_decode_step
+
+            self._pipe_mesh = Mesh(
+                np.asarray(devs[:self.pipeline_stages]), ("stage",))
+            self._step_fn = partial(pipeline_decode_step,
+                                    mesh=self._pipe_mesh,
+                                    n_stages=self.pipeline_stages,
+                                    n_microbatch=n_micro)
+        # Routing telemetry (MoE only): per-step dropped-assignment fraction
+        # ring buffers surfaced through :meth:`stats` for the gateway.
+        self._moe_stats = bool(cfg.moe)
+        if self._moe_stats:
+            from .gateway import Ring
+
+            self.rings = {"moe_drop_frac": Ring(512)}
+        else:
+            self.rings = {}
         self._tuning_cache_arg = tuning_cache
         self.tune_cache = None
         self.faults = faults
@@ -219,11 +270,20 @@ class ServeEngine:
 
         if self.tune_cache is None:
             self.tune_cache = _at.as_cache(self._tuning_cache_arg)
+        moe_kw = {}
+        if self.cfg.moe:
+            # Expert GEMMs batch every expert's capacity rows through one
+            # vmapped dispatch — key their decisions on the (E*C, d, f)
+            # batched shape, not the token batch (DESIGN.md §11).
+            from repro.models.lm.moe import _capacity
+
+            moe_kw["moe_m_hint"] = (self.cfg.moe.n_experts
+                                    * _capacity(self.max_batch, self.cfg))
         self.params = _at.tune_tree(
             self.params, m_hint=self.max_batch,
             a_bits=self.cfg.pim.a_bits,
             backends=_at.default_backends(self.mesh),
-            mode=self.autotune, cache=self.tune_cache)
+            mode=self.autotune, cache=self.tune_cache, **moe_kw)
 
     def _build_programs(self):
         """(Re)compile the three hot-loop programs for the current cfg/params.
@@ -255,6 +315,8 @@ class ServeEngine:
             ad_kw = dict(in_shardings=(c_sh, repl, repl, repl, repl),
                          out_shardings=(c_sh, repl))
             dec_out = (s_sh, c_sh, stream, stream)
+            if self._moe_stats:
+                dec_out = dec_out + (repl,)        # (n,) drop-frac telemetry
             if self._transient:
                 dec_out = dec_out + (repl,)        # the in-jit health flag
             self._dec_kw = dict(in_shardings=(p_sh, s_sh, c_sh),
@@ -323,27 +385,40 @@ class ServeEngine:
         return ctrl, tok
 
     @staticmethod
-    def _step_core(cfg, sampler, params, state, ctrl, faults=None):
+    def _step_core(cfg, sampler, params, state, ctrl, faults=None,
+                   step_fn=decode_step, want_stats=False):
         """One fused decode+sample step. Only (B,) tokens/flags leave jit.
 
         With transient faults, a disturb key splits off the engine key and
         the decode runs under ``read_disturb_scope`` — every bit-serial
-        matmul senses a freshly disturbed view of its planes; a fifth
+        matmul senses a freshly disturbed view of its planes; an extra
         output reports in-jit logit health (the NaN watchdog probe). With
         ``faults=None`` the traced program is byte-identical to before.
+
+        ``step_fn`` is the decode-step implementation — the sequential
+        ``decode_step`` or the pipeline-composed
+        ``distributed.pipeline.pipeline_decode_step`` partial.
+        ``want_stats`` (MoE engines) appends the per-step routing
+        drop-fraction scalar to the outputs. Extra-output order is fixed:
+        (state, ctrl, tok, done[, drop][, ok]).
         """
+        def run(st):
+            return step_fn(params, cfg, ctrl["last_tok"][:, None], st,
+                           return_stats=want_stats)
+
         if faults is not None and faults.transient:
             from repro.pim.faults import read_disturb_scope
 
             key0, dkey = jax.random.split(ctrl["key"])
             ctrl = dict(ctrl, key=key0)
             with read_disturb_scope(faults, dkey):
-                logits, new_state = decode_step(params, cfg,
-                                                ctrl["last_tok"][:, None],
-                                                state)
+                out = run(state)
         else:
-            logits, new_state = decode_step(params, cfg,
-                                            ctrl["last_tok"][:, None], state)
+            out = run(state)
+        if want_stats:
+            logits, new_state, st_stats = out
+        else:
+            logits, new_state = out
         key, sub = jax.random.split(ctrl["key"])
         keys = jax.random.split(sub, ctrl["last_tok"].shape[0])
         nxt = sample_per_slot(logits[:, 0], sampler, keys)
@@ -356,37 +431,42 @@ class ServeEngine:
                                         state["length"])
         ctrl = dict(ctrl, key=key, last_tok=nxt, remaining=remaining,
                     live=ctrl["live"] & ~done)
+        extra = ()
+        if want_stats:
+            extra = extra + (st_stats["moe_drop_frac"],)
         if faults is not None and faults.transient:
-            return new_state, ctrl, nxt, done, jnp.isfinite(logits).all()
-        return new_state, ctrl, nxt, done
+            extra = extra + (jnp.isfinite(logits).all(),)
+        return (new_state, ctrl, nxt, done) + extra
 
     @staticmethod
-    def _decode_impl(cfg, sampler, faults, n, params, state, ctrl):
+    def _decode_impl(cfg, sampler, faults, step_fn, want_stats, n,
+                     params, state, ctrl):
         """``n`` fused decode steps per dispatch; emits (n, B) tokens/flags
-        (+ one dispatch-level health flag when transient faults are on)."""
+        (+ the (n,) per-step drop fractions on MoE engines, + one
+        dispatch-level health flag when transient faults are on)."""
         transient = faults is not None and faults.transient
 
         def body(carry, _):
             st, ct = carry
-            out = ServeEngine._step_core(cfg, sampler, params, st, ct, faults)
-            if transient:
-                st, ct, tok, done, ok = out
-                return (st, ct), (tok, done, ok)
-            st, ct, tok, done = out
-            return (st, ct), (tok, done)
+            out = ServeEngine._step_core(cfg, sampler, params, st, ct,
+                                         faults, step_fn, want_stats)
+            return (out[0], out[1]), out[2:]
 
         (state, ctrl), ys = jax.lax.scan(body, (state, ctrl), None, length=n)
+        ys = list(ys)
+        out = [state, ctrl, ys.pop(0), ys.pop(0)]
+        if want_stats:
+            out.append(ys.pop(0))           # (n,) per-step drop fractions
         if transient:
-            toks, dones, oks = ys
-            return state, ctrl, toks, dones, oks.all()
-        toks, dones = ys
-        return state, ctrl, toks, dones
+            out.append(ys.pop(0).all())
+        return tuple(out)
 
     def _decode_fn(self, n: int):
         fn = self._decode.get(n)
         if fn is None:
             fn = jax.jit(partial(self._decode_impl, self.cfg, self.sampler,
-                                 self.faults, n),
+                                 self.faults, self._step_fn,
+                                 self._moe_stats, n),
                          donate_argnums=(1, 2), **self._dec_kw)
             self._decode[n] = fn
         return fn
@@ -402,16 +482,41 @@ class ServeEngine:
         lower under :meth:`_activate`, exactly like the real dispatch."""
         from repro import analysis as _an
 
+        # The all-to-all budget is 0 — decode must not reshard — except on
+        # the packed expert-parallel MoE layout (mesh "model" axis divides
+        # E, weights prepacked): there the dispatch/combine all-to-all is
+        # the *designed* collective (DESIGN.md §11), budgeted per FFN site
+        # (dispatch + combine + the small occupancy mask per MoE layer).
+        a2a_cap = 0
+        if self.cfg.moe and self.mesh is not None \
+                and getattr(self.cfg.pim, "enabled", False):
+            from repro.distributed import sharding as _sh
+            from repro.models.lm.model import layer_plan
+
+            ms = _sh.axis_size(self.mesh, "model")
+            if ms > 1 and self.cfg.moe.n_experts % ms == 0:
+                unit, _, rest = layer_plan(self.cfg)
+                sites = sum(k != "rwkv" for k in unit + rest)
+                a2a_cap = 4 * max(sites, 1)
         base = dict(
-            collectives=(("all-to-all", 0),),
+            collectives=(("all-to-all", a2a_cap),),
             compute_dtype="bf16" if str(self.cfg.dtype) == "bfloat16"
             else None,
             m_hint=self.max_batch,
             pallas_ok=self.mesh is None,
         )
+        # Pipelined decode adds exactly one collective class of its own:
+        # the inter-stage permute (plus the drain psum all-reduces, which
+        # the byte bound and scan-flatness already police). Cap it so a
+        # permute can never creep inside the per-rep layer scan.
+        dec_coll = base["collectives"]
+        if self.pipeline_stages > 1:
+            dec_coll = dec_coll + (("collective-permute", 4),)
         tokens = jnp.zeros((1, 1), jnp.int32)
         logits = jnp.zeros((1, 1, self.cfg.vocab),
                            jnp.dtype(self.cfg.dtype))
+        dec_name = ("lm.decode.pipelined" if self.pipeline_stages > 1
+                    else "lm.decode")
         return [
             _an.HotPath(
                 "lm.prefill", "lm",
@@ -426,9 +531,10 @@ class ServeEngine:
                              (self.ctrl, logits, 0, -1, 4))],
                 context=self._activate),
             _an.HotPath(
-                "lm.decode", "lm",
+                dec_name, "lm",
                 _an.Budget(donate=(1, 2), max_gather_bytes=16384,
-                           scan_flat=True, **base),
+                           scan_flat=True,
+                           **dict(base, collectives=dec_coll)),
                 [_an.Program(f"n={n}", self._decode_fn(n),
                              (self.params, self.state, self.ctrl))
                  for n in sorted({1, self.drain_steps})],
@@ -582,11 +688,14 @@ class ServeEngine:
             n = 1 << (cap.bit_length() - 1)   # pow2 -> bounded compile count
         with self._activate():
             res = self._decode_fn(n)(self.params, self.state, self.ctrl)
+        res = list(res)
+        self.state, self.ctrl, toks, dones = res[:4]
+        res = res[4:]
+        if self._moe_stats:
+            for v in np.asarray(res.pop(0)):
+                self.rings["moe_drop_frac"].push(float(v))
         if self._transient:
-            self.state, self.ctrl, toks, dones, ok = res
-            self._last_ok = bool(ok)
-        else:
-            self.state, self.ctrl, toks, dones = res
+            self._last_ok = bool(res.pop(0))
         toks = np.asarray(toks)
         dones = np.asarray(dones)
         for k in range(n):
@@ -602,6 +711,20 @@ class ServeEngine:
 
     def _drain_done(self):
         out, self.done = self.done, []
+        return out
+
+    def stats(self) -> dict:
+        """Live telemetry snapshot: supervision health plus the ring-buffer
+        channels (MoE engines: ``moe_drop_frac`` — per-decode-step fraction
+        of top-k routing assignments dropped at expert capacity). The
+        gateway merges this into its own :meth:`Gateway.stats` payload so
+        operators see routing overflow next to goodput/shed counts."""
+        out = {"health": dict(self.health)}
+        for name, ring in self.rings.items():
+            v = ring.values()
+            out[name] = dict(ring.percentiles(),
+                             n=len(ring),
+                             mean=float(v.mean()) if len(ring) else None)
         return out
 
     # -- watchdog supervision (DESIGN.md §7) --------------------------------

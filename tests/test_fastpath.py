@@ -309,10 +309,12 @@ def test_engine_prepacks_weights_once():
     assert all(fn._cache_size() == 1 for fn in eng._decode.values())
 
 
-def test_prepack_skips_moe_expert_banks():
-    """Regression: MoE expert weights (E, d, f) share key names with
-    scan-stacked MLP weights but are consumed via einsum, not pim_linear —
-    prepacking them crashed forward for MoE models with remainder layers."""
+def test_prepack_packs_moe_expert_banks():
+    """MoE expert banks ride the prepacked fast path: (E, d, f) leaves in
+    router-bearing dicts pack per expert (one vmap level deeper than the
+    scan stack), the router stays float, and forward runs the packed
+    bit-serial expert FFN end to end — both for scan-stacked (R, E, d, f)
+    banks and for raw (E, d, f) banks in remainder layers."""
     from repro.models.lm import ModelConfig, MoEConfig, forward, init, prepack_params
 
     pim = PIMQuantConfig(w_bits=8, a_bits=8, backend="int-direct")
@@ -326,11 +328,23 @@ def test_prepack_skips_moe_expert_banks():
     params = init(cfg, jax.random.PRNGKey(0))
     pk = prepack_params(params, pim)
     rest_ffn = pk["rest"][0]["ffn"]
-    assert not isinstance(rest_ffn["w_in"], PackedWeight)  # stays float
+    e, d, f = params["rest"][0]["ffn"]["w_in"].shape
+    assert isinstance(rest_ffn["w_in"], PackedWeight)
+    assert rest_ffn["w_in"].codes.shape == (e, d, f)         # expert-stacked
+    assert rest_ffn["w_in"].col_sums.shape == (e, f)
+    assert not isinstance(rest_ffn["router"], PackedWeight)  # router float
+    scan_ffn = pk["scan"][0]["ffn"]
+    assert isinstance(scan_ffn["w_in"], PackedWeight)
+    assert scan_ffn["w_in"].codes.shape == (8, e, d, f)      # scan + experts
     assert isinstance(pk["rest"][0]["rglru"]["w_x"], PackedWeight)
     x = jnp.asarray([[3, 1, 4, 1, 5]], jnp.int32)
     logits, _ = forward(pk, cfg, x)
     assert jnp.isfinite(logits).all()
+    # Prepacked at deploy time == packed per call from the same masters:
+    # prepack is deterministic, so the fast path's codes are exactly the
+    # ones a fresh pack of the float masters would produce.
+    logits2, _ = forward(prepack_params(params, pim), cfg, x)
+    assert jnp.array_equal(logits, logits2)
 
 
 def test_cnn_prepack_bit_exact_and_conv_weights_packed():
